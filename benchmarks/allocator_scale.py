@@ -1,0 +1,95 @@
+"""Fleet-scale allocator benchmarks (beyond-paper, feeds EXPERIMENTS.md §Perf).
+
+Compares, on REAL CPU wall-clock:
+  * paper-faithful-sequential: per-service scalar bisection in a Python loop
+    inside each dual iteration (how Algorithm 1 reads) -- small N only;
+  * paper-faithful-vectorized: the same subgradient dual, all services
+    solved as one batched bisection (our DISBA);
+  * beyond-paper-bisect: direct market clearing on the monotone aggregate
+    demand (48 fixed trips);
+  * beyond-paper-newton: damped Newton with the closed-form demand slope
+    (quadratic convergence, <= 12 trips).
+
+The Pallas bisect_alloc kernel is the TPU deployment of the inner solve; on
+this CPU host it is validated in interpret mode (tests/test_kernels.py) and
+not timed here.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import disba, intra, network
+from repro.core.types import ServiceSet
+
+
+def _sequential_disba(svc: ServiceSet, B: float, gamma=0.1, eps=1e-3,
+                      max_iters=500) -> tuple[np.ndarray, int]:
+    """Algorithm 1 as literally written: loop over providers each iteration."""
+    n = svc.n_services
+    lam_scale = float(jnp.max(intra.p_max(svc)))
+    lam = 0.5 * lam_scale
+    singles = [
+        ServiceSet(alpha=svc.alpha[i:i + 1], t_comp=svc.t_comp[i:i + 1],
+                   mask=svc.mask[i:i + 1])
+        for i in range(n)
+    ]
+    demands = np.zeros(n)
+    for j in range(max_iters):
+        for i, s in enumerate(singles):                    # the provider loop
+            demands[i] = float(intra.demand(s, jnp.float32(lam))[0])
+        gap = B - demands.sum()
+        lam_next = min(max(lam - gamma * lam_scale * gap / B, 0.0), lam_scale)
+        if abs(lam_next - lam) <= eps * lam_scale:
+            return demands, j + 1
+        lam = lam_next
+    return demands, max_iters
+
+
+def run() -> list[dict]:
+    rows = []
+    B = network.B_TOTAL_MHZ
+
+    # ---- sequential vs vectorized at small N (the honesty baseline)
+    svc_small, _ = network.sample_services(jax.random.key(1), 8, k_max=30)
+    import time
+    t0 = time.perf_counter()
+    _, iters_seq = _sequential_disba(svc_small, B)
+    t_seq = (time.perf_counter() - t0) * 1e6
+    us_vec = common.time_fn(lambda: disba.disba(svc_small, B, gamma=0.1), iters=5)
+    rows.append(common.row("scale/sequential_N8", t_seq, f"iters={iters_seq}"))
+    rows.append(common.row("scale/vectorized_N8", us_vec,
+                           f"speedup={t_seq / us_vec:.1f}x"))
+
+    # ---- fleet scale: vectorized subgradient vs bisect vs newton
+    for n in (100, 1_000, 10_000):
+        svc, _ = network.sample_services(jax.random.key(2), n, k_max=32)
+        us_sub = common.time_fn(lambda s=svc: disba.disba(s, B, gamma=0.1),
+                                iters=3)
+        us_bis = common.time_fn(lambda s=svc: disba.solve_lambda_bisect(s, B),
+                                iters=3)
+        us_new = common.time_fn(lambda s=svc: disba.solve_lambda_newton(s, B),
+                                iters=3)
+        # cross-check all three agree
+        b1 = disba.solve_lambda_bisect(svc, B).b
+        b2 = disba.solve_lambda_newton(svc, B).b
+        dev = float(jnp.max(jnp.abs(b1 - b2)))
+        rows.append(common.row(f"scale/subgradient_N{n}", us_sub,
+                               f"us_per_service={us_sub / n:.2f}"))
+        rows.append(common.row(f"scale/bisect_N{n}", us_bis,
+                               f"us_per_service={us_bis / n:.2f}"))
+        rows.append(common.row(f"scale/newton_N{n}", us_new,
+                               f"us_per_service={us_new / n:.2f} "
+                               f"max_dev_vs_bisect={dev:.2e}"))
+
+    # ---- intra-service solve throughput (the Pallas kernel's workload)
+    svc, _ = network.sample_services(jax.random.key(3), 10_000, k_max=32)
+    b = jnp.full((10_000,), B / 100)
+    us_intra = common.time_fn(
+        lambda: intra.client_allocation_jit(svc, b), iters=3)
+    rows.append(common.row("scale/intra_alloc_N10000", us_intra,
+                           f"ns_per_service={1e3 * us_intra / 10_000:.1f}"))
+    common.save_artifact("allocator_scale", [r for r in rows])
+    return rows

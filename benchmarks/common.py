@@ -1,0 +1,40 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables and the
+canonical `name,us_per_call,derived` CSV row format."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median-of-iters wall time in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us_per_call: float | None, derived: str) -> dict:
+    return {"name": name, "us_per_call": us_per_call, "derived": derived}
+
+
+def emit(rows: list[dict]) -> None:
+    for r in rows:
+        us = "" if r["us_per_call"] is None else f"{r['us_per_call']:.1f}"
+        print(f"{r['name']},{us},{r['derived']}")
+
+
+def save_artifact(name: str, data) -> str:
+    os.makedirs("artifacts/bench", exist_ok=True)
+    path = f"artifacts/bench/{name}.json"
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+    return path

@@ -1,0 +1,138 @@
+"""Paper Figs. 11-15: per-period policy comparison (11) and the long-term
+multi-period simulations -- average service duration (12), client-count
+heterogeneity sweep (13), channel heterogeneity sweep (14), arrival-rate
+sweep (15).
+
+Scaled for CI wall-clock: rounds_required=400 (paper: 2000), services=6
+(paper: 10), 6 seeds (paper: 20 runs) -- the orderings the paper reports are
+scale-invariant and asserted in tests/test_benchmarks.py.  Pass --full to
+benchmarks.run for the paper-sized setting.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import auction, baselines, disba, intra, network
+from repro.fl import simulator
+
+POLICIES = ("coop", "selfish", "ec", "es", "pp")
+
+
+def _per_period(seeds=range(6)) -> dict:
+    """Fig 11: mean objective sum log(1+f) per policy over random periods
+    (5 services, clients ~ N(20, var 10), channels ~ N(85, var 15))."""
+    cfg_net = network.NetworkConfig(mean_clients=20, var_clients=10)
+    out = {p: [] for p in POLICIES}
+    for seed in seeds:
+        svc, _ = network.sample_services(jax.random.key(seed), 5, cfg_net)
+        B = cfg_net.total_bandwidth_mhz
+        for pol in POLICIES:
+            if pol == "coop":
+                f = disba.solve_lambda_bisect(svc, B).f
+            elif pol == "selfish":
+                bid = auction.uniform_truthful_bids(svc, 5, 0.5)
+                b, _ = auction.allocate(bid, B)
+                f = intra.freq(svc, b)
+            elif pol == "ec":
+                _, f = baselines.equal_client(svc, B)
+            elif pol == "es":
+                _, f = baselines.equal_service(svc, B)
+            else:
+                _, f = baselines.proportional(svc, B)
+            out[pol].append(float(jnp.sum(jnp.log1p(f))))
+    return {p: (float(np.mean(v)), float(np.std(v))) for p, v in out.items()}
+
+
+def _per_period_total_freq(seeds=range(6)) -> dict:
+    cfg_net = network.NetworkConfig(mean_clients=20, var_clients=10)
+    out = {p: [] for p in POLICIES}
+    for seed in seeds:
+        svc, _ = network.sample_services(jax.random.key(seed), 5, cfg_net)
+        B = cfg_net.total_bandwidth_mhz
+        for pol in POLICIES:
+            if pol == "coop":
+                f = disba.solve_lambda_bisect(svc, B).f
+            elif pol == "selfish":
+                bid = auction.uniform_truthful_bids(svc, 5, 0.5)
+                b, _ = auction.allocate(bid, B)
+                f = intra.freq(svc, b)
+            elif pol == "ec":
+                _, f = baselines.equal_client(svc, B)
+            elif pol == "es":
+                _, f = baselines.equal_service(svc, B)
+            else:
+                _, f = baselines.proportional(svc, B)
+            out[pol].append(float(jnp.sum(f)))
+    return {p: (float(np.mean(v)), float(np.std(v))) for p, v in out.items()}
+
+
+def _durations(policy: str, seeds, **overrides) -> tuple[float, float]:
+    durs = []
+    base = dict(n_services_total=6, rounds_required=400, p_arrive=5.0)
+    base.update(overrides)
+    for seed in seeds:
+        out = simulator.run(simulator.SimConfig(policy=policy, seed=seed, **base))
+        durs.append(out["avg_duration"])
+    return float(np.mean(durs)), float(np.std(durs))
+
+
+def run(full: bool = False) -> list[dict]:
+    rows = []
+    seeds = range(20 if full else 4)
+
+    # ---- Fig 11 (both metrics: PF objective and total frequency -- the
+    # paper's "overall performance" reads closest to the latter for the
+    # selfish mechanism at alpha=0.5)
+    fig11 = _per_period(range(20 if full else 6))
+    for pol, (mean, std) in fig11.items():
+        rows.append(common.row(f"fig11/{pol}", None,
+                               f"objective={mean:.4f}+-{std:.4f}"))
+    fig11_f = _per_period_total_freq(range(20 if full else 6))
+    for pol, (mean, std) in fig11_f.items():
+        rows.append(common.row(f"fig11_totalfreq/{pol}", None,
+                               f"sum_f={mean:.2f}+-{std:.2f}"))
+    common.save_artifact("fig11_per_period",
+                         {"objective": fig11, "total_freq": fig11_f})
+
+    # ---- Fig 12: average duration per policy
+    over = {"rounds_required": 2000, "n_services_total": 10} if full else {}
+    fig12 = {}
+    for pol in POLICIES:
+        mean, std = _durations(pol, seeds, **over)
+        fig12[pol] = (mean, std)
+        rows.append(common.row(f"fig12/{pol}", None,
+                               f"avg_duration={mean:.2f}+-{std:.2f}"))
+    common.save_artifact("fig12_duration", fig12)
+
+    # ---- Fig 13: client-count heterogeneity (variance sweep)
+    fig13 = {}
+    for var in (0.0, 5.0, 15.0):
+        for pol in ("coop", "es"):
+            mean, std = _durations(pol, seeds, var_clients=var, **over)
+            fig13[f"{pol}/var{var}"] = (mean, std)
+            rows.append(common.row(f"fig13/{pol}/var{var}", None,
+                                   f"avg_duration={mean:.2f}+-{std:.2f}"))
+    common.save_artifact("fig13_client_heterogeneity", fig13)
+
+    # ---- Fig 14: channel heterogeneity (variance sweep)
+    fig14 = {}
+    for var in (0.0, 5.0, 15.0):
+        for pol in ("coop", "es"):
+            mean, std = _durations(pol, seeds, var_channel_db=var, **over)
+            fig14[f"{pol}/var{var}"] = (mean, std)
+            rows.append(common.row(f"fig14/{pol}/var{var}", None,
+                                   f"avg_duration={mean:.2f}+-{std:.2f}"))
+    common.save_artifact("fig14_channel_heterogeneity", fig14)
+
+    # ---- Fig 15: arrival interval sweep
+    fig15 = {}
+    for p_arrive in (1.0, 3.0, 5.0, 8.0):
+        mean, std = _durations("coop", seeds, p_arrive=p_arrive, **over)
+        fig15[p_arrive] = (mean, std)
+        rows.append(common.row(f"fig15/p_arrive{p_arrive}", None,
+                               f"avg_duration={mean:.2f}+-{std:.2f}"))
+    common.save_artifact("fig15_arrival", fig15)
+    return rows

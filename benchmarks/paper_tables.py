@@ -1,0 +1,84 @@
+"""Paper Tables I-III: the representative 5-service period (10/12/14/16/18
+clients) under cooperative DISBA (Table I), DISBA's computational complexity
+vs (eps, gamma) (Table II), and the fairness-adjusted multi-bid auction with
+M=5, alpha=0.5 (Table III).
+
+Exact numbers are seed-dependent (the paper publishes no seeds); what must
+reproduce are the structural facts: near-uniform bandwidth ratios with more
+clients costing frequency, sum(b)=B, tens-of-iterations convergence that
+speeds up with looser eps / larger gamma, and the auction tracking the
+cooperative allocation at moderate M.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import auction, disba, intra, network
+
+
+def run() -> list[dict]:
+    rows = []
+    svc, meta = network.table1_service_set(jax.random.key(0))
+    B, T = network.B_TOTAL_MHZ, network.PERIOD_S
+
+    # ---- Table I: cooperative allocation
+    res = disba.solve_lambda_bisect(svc, B)
+    us = common.time_fn(lambda: disba.solve_lambda_bisect(svc, B))
+    tbl1 = []
+    for i in range(5):
+        tbl1.append({
+            "service": i + 1,
+            "clients": int(meta["client_counts"][i]),
+            "bandwidth_ratio": round(float(res.b[i] / B), 3),
+            "rounds_per_period": round(float(res.f[i] * T), 1),
+        })
+        rows.append(common.row(
+            f"table1/coop/service{i + 1}", None,
+            f"ratio={tbl1[-1]['bandwidth_ratio']} "
+            f"freq={tbl1[-1]['rounds_per_period']}"))
+    rows.append(common.row("table1/solve", us, f"lambda={float(res.lam):.4f}"))
+    common.save_artifact("table1_coop", tbl1)
+
+    # ---- Table II: DISBA complexity vs (eps, gamma)
+    tbl2 = []
+    for eps in (1e-3, 5e-3):
+        for gamma in (0.1, 0.05):
+            hist = disba.disba_trace(svc, B, gamma=gamma, eps=eps)
+            us2 = common.time_fn(
+                lambda g=gamma, e=eps: disba.disba(svc, B, gamma=g, eps=e),
+                iters=5)
+            tbl2.append({"eps": eps, "gamma": gamma,
+                         "iterations": hist["iterations"],
+                         "time_us": round(us2, 1)})
+            rows.append(common.row(
+                f"table2/eps{eps}/gamma{gamma}", us2,
+                f"iterations={hist['iterations']}"))
+    # the paper's gamma=0.5 violates our scenario's stability bound
+    # gamma < 2/|D_hat'| (measured); the diminishing-step variant converges
+    hist_d = disba.disba_trace(svc, B, gamma=0.5, eps=1e-3, diminishing=True)
+    rows.append(common.row("table2/gamma0.5_diminishing", None,
+                           f"iterations={hist_d['iterations']}"))
+    common.save_artifact("table2_complexity", tbl2)
+
+    # ---- Table III: selfish auction, M=5, alpha=0.5
+    ar = auction.run_auction(svc, B, n_bids=5, alpha_fair=0.5)
+    us3 = common.time_fn(
+        lambda: auction.run_auction(svc, B, n_bids=5, alpha_fair=0.5), iters=5)
+    tbl3 = []
+    for i in range(5):
+        tbl3.append({
+            "service": i + 1,
+            "clients": int(meta["client_counts"][i]),
+            "bandwidth_ratio": round(float(ar.b[i] / B), 3),
+            "rounds_per_period": round(float(ar.f[i] * T), 1),
+        })
+        rows.append(common.row(
+            f"table3/selfish/service{i + 1}", None,
+            f"ratio={tbl3[-1]['bandwidth_ratio']} "
+            f"freq={tbl3[-1]['rounds_per_period']}"))
+    rows.append(common.row("table3/auction", us3,
+                           f"zeta={float(ar.price):.4f}"))
+    common.save_artifact("table3_selfish", tbl3)
+    return rows

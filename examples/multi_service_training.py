@@ -1,0 +1,26 @@
+"""Example 2: REAL multi-service federated training under allocated bandwidth.
+
+Two FL services (a reduced gemma-2b and a reduced xlstm-1.3b) train
+concurrently on synthetic-but-learnable data; every period DISBA splits the
+10 MHz between them, the intra-service solver splits each share across
+clients, the round-time model converts bandwidth into wall-clock rounds, and
+each service runs that many honest FedAvg rounds (with straggler deadlines).
+
+This is a thin wrapper over the production driver:
+
+  PYTHONPATH=src python examples/multi_service_training.py
+(equivalent to python -m repro.launch.train --services gemma-2b,xlstm-1.3b
+ --policy coop --periods 3 --checkpoint-dir /tmp/fl_ckpt)
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0],
+                "--services", "gemma-2b,xlstm-1.3b",
+                "--policy", "coop",
+                "--periods", "3",
+                "--clients", "4",
+                "--checkpoint-dir", "/tmp/fl_quickstart_ckpt"]
+    train.main()

@@ -1,0 +1,16 @@
+"""Example 3: batched serving with a KV cache (prefill + decode loop).
+
+Runs a reduced gemma3-1b (sliding-window + global attention interleave)
+through the production serve path: prefill builds the cache, then tokens
+decode one at a time against it.
+
+  PYTHONPATH=src python examples/serve_model.py
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "gemma3-1b", "--batch", "4",
+                "--prompt-len", "64", "--gen", "24"]
+    serve.main()

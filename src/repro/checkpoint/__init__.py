@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing: step-atomic npz shards + JSON metadata,
+auto-resume from the latest complete checkpoint, bounded retention."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,142 @@
+"""Pytree checkpointing without orbax.
+
+Layout:  <dir>/step_<N>/
+            meta.json          # tree structure + shapes + dtypes + user info
+            shard_<i>.npz      # flat leaves, chunked to ~512MB per shard
+            COMMIT             # written LAST -> presence marks completeness
+
+Crash-safety: a checkpoint is valid iff COMMIT exists; ``restore_latest``
+skips incomplete step dirs (a mid-write crash leaves no COMMIT).  Writes go to
+a temp dir renamed into place, so a half-written step never shadows an older
+complete one.  ``keep`` bounds retention (oldest complete checkpoints pruned
+after a new COMMIT).  This is the restart path the FL simulator and the
+training driver use for fault tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+_COMMIT = "COMMIT"
+_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _flatten_with_names(tree) -> list[tuple[str, Any]]:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and os.path.exists(
+                os.path.join(self.directory, name, _COMMIT)
+            ):
+                steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, extra: dict | None = None) -> str:
+        named = _flatten_with_names(tree)
+        treedef = jax.tree.structure(tree)
+        final_dir = self._step_dir(step)
+        tmp_dir = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
+        try:
+            shards: list[list[tuple[str, np.ndarray]]] = [[]]
+            size = 0
+            for name, leaf in named:
+                arr = np.asarray(leaf)
+                if size + arr.nbytes > _SHARD_BYTES and shards[-1]:
+                    shards.append([])
+                    size = 0
+                shards[-1].append((name, arr))
+                size += arr.nbytes
+            index = {}
+            for i, shard in enumerate(shards):
+                fname = f"shard_{i:04d}.npz"
+                np.savez(os.path.join(tmp_dir, fname),
+                         **{n: a for n, a in shard})
+                for n, _ in shard:
+                    index[n] = fname
+            meta = {
+                "step": step,
+                "treedef": str(treedef),
+                "leaf_names": [n for n, _ in named],
+                "index": index,
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp_dir, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            # commit marker written last inside tmp, then atomic rename
+            with open(os.path.join(tmp_dir, _COMMIT), "w") as f:
+                f.write("ok")
+            if os.path.exists(final_dir):
+                shutil.rmtree(final_dir)
+            os.rename(tmp_dir, final_dir)
+        except BaseException:
+            shutil.rmtree(tmp_dir, ignore_errors=True)
+            raise
+        self._prune()
+        return final_dir
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int, like):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs)."""
+        step_dir = self._step_dir(step)
+        if not os.path.exists(os.path.join(step_dir, _COMMIT)):
+            raise FileNotFoundError(f"no complete checkpoint at step {step}")
+        with open(os.path.join(step_dir, "meta.json")) as f:
+            meta = json.load(f)
+        cache: dict[str, Any] = {}
+
+        def load(name: str) -> np.ndarray:
+            fname = meta["index"][name]
+            if fname not in cache:
+                cache[fname] = np.load(os.path.join(step_dir, fname))
+            return cache[fname][name]
+
+        named_like = _flatten_with_names(like)
+        leaves = [load(name) for name, _ in named_like]
+        treedef = jax.tree.structure(like)
+        restored = jax.tree.unflatten(treedef, leaves)
+        return jax.tree.map(
+            lambda ref, arr: np.asarray(arr).astype(
+                ref.dtype if hasattr(ref, "dtype") else arr.dtype
+            ),
+            like, restored,
+        ), meta["extra"]
+
+    def restore_latest(self, like):
+        """(step, tree, extra) from the newest COMPLETE checkpoint, or
+        (None, like, {}) when none exists -- the auto-resume entry point."""
+        steps = self.all_steps()
+        if not steps:
+            return None, like, {}
+        step = steps[-1]
+        tree, extra = self.restore(step, like)
+        return step, tree, extra

@@ -1,0 +1,13 @@
+"""Core contribution of the paper: two-level bandwidth allocation for
+multiple concurrent FL services (intra-service water-filling, cooperative
+DISBA, fairness-adjusted multi-bid auction)."""
+
+from repro.core.types import (  # noqa: F401
+    BISECT_ITERS,
+    RawServiceParams,
+    ServiceSet,
+    make_service_set,
+    round_time_given_alloc,
+    stack_services,
+)
+from repro.core import auction, baselines, disba, fairness, intra, network  # noqa: F401

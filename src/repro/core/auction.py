@@ -1,0 +1,251 @@
+"""Fairness-adjusted multi-bid auction (paper §V.A-§V.E).
+
+Each provider n submits M bids s_n = {(b^m_n, p^m_n)} with prices ascending.
+A truthful bid satisfies p^m = g'_n(b^m) (Definition 1), i.e. the demands are
+the modified-BDF evaluated at the price grid.  The operator:
+
+  1. builds per-provider *pseudo-mBDF* step functions (Eq. 22),
+  2. aggregates them and finds the pseudo market clearing price
+     zeta = sup{ p : d_bar(p) > B }  (Eq. 25),
+  3. allocates demand-at-zeta+ plus a proportional split of the surplus
+     (Eq. 26),
+  4. charges the exclusion-compensation (second-price) term plus the ex-post
+     fairness cost (Eq. 27).
+
+Everything is vectorized over (N providers, M bids): clearing is a sort +
+prefix-sum over the N*M bid prices (O(NM log NM)); leave-one-out reruns for
+the charges are a vmap over exclusion masks.  No Python loops over providers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fairness, intra
+from repro.core.types import BISECT_ITERS, ServiceSet
+
+_TINY = 1e-30
+
+
+class MultiBid(NamedTuple):
+    prices: jax.Array   # (N, M) ascending in m
+    demands: jax.Array  # (N, M) non-increasing in m (mBDF is decreasing)
+
+
+class AuctionResult(NamedTuple):
+    b: jax.Array          # (N,) allocated bandwidth
+    f: jax.Array          # (N,) realized FL frequencies
+    price: jax.Array      # () pseudo-mMCP zeta
+    charges: jax.Array    # (N,) total payments (Eq. 27)
+    utilities: jax.Array  # (N,) f - charges (Eq. 28)
+
+
+# ---------------------------------------------------------------------------
+# Bidding (§V.E uniform multi-bid example).
+# ---------------------------------------------------------------------------
+
+def uniform_truthful_bids(
+    svc: ServiceSet,
+    n_bids: int,
+    alpha_fair: float,
+    p_reserve: float = 0.0,
+    p_max_bound: jax.Array | None = None,
+    iters: int = BISECT_ITERS,
+) -> MultiBid:
+    """Operator announces M prices uniformly on (p0, p_max_n) (Eq. 34); a
+    truthful provider answers with its mBDF demand at each price."""
+    pmax = intra.p_max(svc) if p_max_bound is None else jnp.asarray(p_max_bound)
+    m = jnp.arange(1, n_bids + 1, dtype=svc.alpha.dtype)
+    prices = p_reserve + m[None, :] * (pmax[:, None] - p_reserve) / (n_bids + 1)
+    demands = jax.vmap(
+        lambda p: fairness.mbdf(svc, p, alpha_fair, iters), in_axes=1, out_axes=1
+    )(prices)
+    return MultiBid(prices=prices, demands=demands)
+
+
+# ---------------------------------------------------------------------------
+# Pseudo step functions (Eqns. 22-23).
+# ---------------------------------------------------------------------------
+
+def pseudo_mbdf(bid: MultiBid, p: jax.Array, side: str = "left") -> jax.Array:
+    """Evaluate every provider's pseudo-mBDF at scalar price p -> (N,).
+
+    side='left'  : the (left-continuous) value  d_bar(p)   (Eq. 22)
+    side='right' : the limit from above         d_bar(p+)
+    """
+    idx = jax.vmap(lambda pr: jnp.searchsorted(pr, p, side=side))(bid.prices)
+    ext = jnp.concatenate(
+        [bid.demands, jnp.zeros_like(bid.demands[:, :1])], axis=1
+    )  # demand above the top bid price is 0
+    return jnp.take_along_axis(ext, idx[:, None], axis=1)[:, 0]
+
+
+def pseudo_mmvf_integral(bid: MultiBid, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """integral_{lo}^{hi} q_bar_n(b) db per provider -> (N,).
+
+    q_bar_n (Eq. 23) is piecewise constant: value p^m on (b^{m+1}, b^m]
+    (with b^{M+1} = 0), and 0 above b^1.  lo, hi: (N,) with hi >= lo.
+    """
+    upper = bid.demands                                        # (N, M)  b^m
+    lower = jnp.concatenate(
+        [bid.demands[:, 1:], jnp.zeros_like(bid.demands[:, :1])], axis=1
+    )                                                          # (N, M)  b^{m+1}
+    seg = jnp.clip(jnp.minimum(hi[:, None], upper) - jnp.maximum(lo[:, None], lower), 0.0)
+    return jnp.sum(bid.prices * seg, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Clearing + allocation (Eqns. 25-26).
+# ---------------------------------------------------------------------------
+
+def clearing_price(
+    bid: MultiBid, total_bandwidth: float, p_reserve: float = 0.0,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """zeta = sup{ p : d_bar(p) > B } via descending-price prefix sums.
+
+    As the price drops past p^m_n, provider n's aggregate contribution jumps
+    by delta = b^m_n - b^{m+1}_n >= 0.  Sorting all N*M (price, delta) pairs by
+    descending price, the prefix sum at a price equals d_bar at that price.
+    Ties are handled by validating only the last entry of each equal-price run.
+    ``weights`` (N,) in {0,1} excludes providers (leave-one-out reruns).
+    """
+    n, m = bid.prices.shape
+    nxt = jnp.concatenate([bid.demands[:, 1:], jnp.zeros_like(bid.demands[:, :1])], axis=1)
+    delta = bid.demands - nxt                                  # (N, M) >= 0
+    if weights is not None:
+        delta = delta * weights[:, None]
+    flat_p = bid.prices.reshape(-1)
+    flat_d = delta.reshape(-1)
+    order = jnp.argsort(-flat_p)                               # descending prices
+    p_sorted = flat_p[order]
+    csum = jnp.cumsum(flat_d[order])                           # d_bar at each price
+    # d_bar(p_i) must include *all* bids at price == p_i -> only the last
+    # element of an equal-price run carries the correct prefix sum.
+    is_last = jnp.concatenate([p_sorted[:-1] > p_sorted[1:], jnp.ones((1,), bool)])
+    exceeds = jnp.logical_and(jnp.logical_and(csum > total_bandwidth, is_last),
+                              p_sorted > p_reserve)
+    # Highest price whose run exceeds B.  (exceeds is monotone along the
+    # descending order once true, so the first True has the largest price.)
+    any_exceeds = jnp.any(exceeds)
+    first_idx = jnp.argmax(exceeds)
+    zeta = jnp.where(any_exceeds, p_sorted[first_idx], jnp.asarray(p_reserve, flat_p.dtype))
+    return zeta
+
+
+def allocate(
+    bid: MultiBid,
+    total_bandwidth: float,
+    p_reserve: float = 0.0,
+    weights: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Bandwidth allocation rule (Eq. 26).  Returns (b, zeta).
+
+    b_n = d_bar_n(zeta+) + [d_bar_n(zeta) - d_bar_n(zeta+)] /
+          [d_bar(zeta) - d_bar(zeta+)] * (B - d_bar(zeta+))
+    """
+    w = jnp.ones((bid.prices.shape[0],), bid.prices.dtype) if weights is None else weights
+    zeta = clearing_price(bid, total_bandwidth, p_reserve, weights=w)
+    d_left = pseudo_mbdf(bid, zeta, side="left") * w
+    d_right = pseudo_mbdf(bid, zeta, side="right") * w
+    agg_right = jnp.sum(d_right)
+    jump = d_left - d_right
+    agg_jump = jnp.sum(jump)
+    surplus = jnp.maximum(total_bandwidth - agg_right, 0.0)
+    share = jnp.where(agg_jump > _TINY, jump / jnp.maximum(agg_jump, _TINY) * surplus, 0.0)
+    b = d_right + share
+    return b, zeta
+
+
+# ---------------------------------------------------------------------------
+# Charging (Eq. 27) + full auction run.
+# ---------------------------------------------------------------------------
+
+def charges(
+    svc: ServiceSet,
+    bid: MultiBid,
+    b_alloc: jax.Array,
+    total_bandwidth: float,
+    alpha_fair: float,
+    p_reserve: float = 0.0,
+) -> jax.Array:
+    """c_n = sum_{j != n} int_{b_j(s)}^{b_j(s_-n)} q_bar_j + alpha*(f_n - log(1+f_n)).
+
+    The leave-one-out allocations b_j(s_{-n}) come from re-running the
+    allocation with provider n's bids excluded -- one vmap over the N
+    exclusion masks (no Python loop)."""
+    n = bid.prices.shape[0]
+    eye = jnp.eye(n, dtype=bid.prices.dtype)
+
+    def without(mask_row):
+        b_wo, _ = allocate(bid, total_bandwidth, p_reserve, weights=1.0 - mask_row)
+        return b_wo
+
+    b_without = jax.vmap(without)(eye)                          # (N excl, N provider)
+    lo = jnp.minimum(b_alloc[None, :], b_without)
+    hi = jnp.maximum(b_alloc[None, :], b_without)
+    # Social opportunity cost: others' valuation of the bandwidth they lose
+    # to n's presence.  b_j(s_-n) >= b_j(s) for j != n (n's absence frees
+    # bandwidth), so the integral is taken on [b_j(s), b_j(s_-n)].
+    integrals = jax.vmap(lambda l, h: pseudo_mmvf_integral(bid, l, h))(lo, hi)  # (N, N)
+    off_diag = integrals * (1.0 - jnp.eye(n, dtype=integrals.dtype))
+    social_cost = jnp.sum(off_diag, axis=1)
+    f_real = intra.freq(svc, b_alloc)
+    return social_cost + fairness.fairness_cost(f_real, alpha_fair)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bids", "alpha_fair"))
+def run_auction(
+    svc: ServiceSet,
+    total_bandwidth: float,
+    n_bids: int = 5,
+    alpha_fair: float = 0.5,
+    p_reserve: float = 0.0,
+) -> AuctionResult:
+    """End-to-end fairness-adjusted multi-bid auction with truthful bidders."""
+    bid = uniform_truthful_bids(svc, n_bids, alpha_fair, p_reserve)
+    b, zeta = allocate(bid, total_bandwidth, p_reserve)
+    c = charges(svc, bid, b, total_bandwidth, alpha_fair, p_reserve)
+    f = intra.freq(svc, b)
+    return AuctionResult(b=b, f=f, price=zeta, charges=c, utilities=f - c)
+
+
+# ---------------------------------------------------------------------------
+# Incentive diagnostics (Prop. 5, Eq. 31).
+# ---------------------------------------------------------------------------
+
+def delta_bound(
+    svc: ServiceSet,
+    bid: MultiBid,
+    alpha_fair: float,
+    p_reserve: float = 0.0,
+) -> jax.Array:
+    """The truthfulness gap Delta_n = max_m int_{d(p^{m+1})}^{d(p^m)} (q(b) - p^m) db
+    (Eq. 31) against the *true* mBDF/mMVF.  Because q = g', the integral is
+    exact in closed form:
+
+        int_lo^hi (q(b) - p) db = [g(b_hi) - g(b_lo)] - p * (b_hi - b_lo),
+
+    with g evaluated through f*(b).  Small Delta ==> truthful bidding is an
+    ex-post Delta-Nash equilibrium (Prop. 5)."""
+    n, m = bid.prices.shape
+    pmax = intra.p_max(svc)
+    # p^0 = p_reserve, p^1..p^M from the bids, p^{M+1} = q(0) = p_max.
+    prices_ext = jnp.concatenate(
+        [jnp.full((n, 1), p_reserve, bid.prices.dtype), bid.prices, pmax[:, None]], axis=1
+    )  # (N, M+2)
+    d_ext = jax.vmap(
+        lambda p_col: fairness.mbdf(svc, p_col, alpha_fair), in_axes=1, out_axes=1
+    )(prices_ext)                                                 # (N, M+2)
+    f_ext = jax.vmap(
+        lambda b_col: intra.freq(svc, b_col), in_axes=1, out_axes=1
+    )(d_ext)
+    g_ext = fairness.g_value(f_ext, alpha_fair)                   # (N, M+2)
+
+    b_hi, b_lo = d_ext[:, :-1], d_ext[:, 1:]                      # segments m=0..M
+    g_hi, g_lo = g_ext[:, :-1], g_ext[:, 1:]
+    seg = (g_hi - g_lo) - prices_ext[:, :-1] * (b_hi - b_lo)
+    return jnp.max(seg, axis=1)

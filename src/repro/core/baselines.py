@@ -1,0 +1,35 @@
+"""Benchmark allocation policies from §VI.D.
+
+  * Equal-Client (EC):  every client network-wide gets B / sum_n K_n; no
+    intra-service optimization (round gated by the worst client).
+  * Equal-Service (ES): every service gets B / N, then splits it optimally.
+  * Proportional (PP):  service n gets B * K_n / sum_j K_j, split optimally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import intra
+from repro.core.types import ServiceSet, round_time_given_alloc
+
+
+def equal_client(svc: ServiceSet, total_bandwidth: float) -> tuple[jax.Array, jax.Array]:
+    """Returns (b_service, f) under uniform per-client bandwidth."""
+    counts = svc.client_counts().astype(svc.alpha.dtype)
+    per_client = total_bandwidth / jnp.maximum(jnp.sum(counts), 1.0)
+    b_clients = jnp.where(svc.mask, per_client, 0.0)
+    t = round_time_given_alloc(svc, b_clients)
+    return counts * per_client, 1.0 / t
+
+
+def equal_service(svc: ServiceSet, total_bandwidth: float) -> tuple[jax.Array, jax.Array]:
+    n = svc.n_services
+    b = jnp.full((n,), total_bandwidth / n, dtype=svc.alpha.dtype)
+    return b, intra.freq(svc, b)
+
+
+def proportional(svc: ServiceSet, total_bandwidth: float) -> tuple[jax.Array, jax.Array]:
+    counts = svc.client_counts().astype(svc.alpha.dtype)
+    b = total_bandwidth * counts / jnp.maximum(jnp.sum(counts), 1.0)
+    return b, intra.freq(svc, b)

@@ -1,0 +1,124 @@
+"""Wireless-network and workload samplers reproducing the paper's §VI.A setup.
+
+Defaults (paper values):
+  * total bandwidth B = 10 MHz, period T = 20 s
+  * noise power N0 = 1e-12 W
+  * client count K_n ~ Normal(25, var 15), clipped to >= 2
+  * path loss [dB]  ~ Normal(85, var 15)  (per-service mean, then per-client)
+  * model size      ~ U[0.2, 0.5] Mbit (download = upload payload)
+  * local training time ~ U[0.01, 0.05] s ; global aggregation 1e-5 s
+  * uplink power   ~ U[0.05, 0.15] W ; downlink power ~ U[0.1, 0.3] W
+
+Units follow repro.core.types: MHz / Mbit / seconds, so base rates are
+bit/s/Hz and alpha = size/rate is in MHz*s.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ServiceSet
+
+B_TOTAL_MHZ = 10.0
+PERIOD_S = 20.0
+NOISE_W = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    total_bandwidth_mhz: float = B_TOTAL_MHZ
+    period_s: float = PERIOD_S
+    noise_w: float = NOISE_W
+    mean_clients: float = 25.0
+    var_clients: float = 15.0
+    mean_pathloss_db: float = 85.0
+    var_pathloss_db: float = 15.0       # across-service variance
+    var_pathloss_client_db: float = 4.0  # within-service client spread
+    model_mbit_lo: float = 0.2
+    model_mbit_hi: float = 0.5
+    t_local_lo: float = 0.01
+    t_local_hi: float = 0.05
+    t_global: float = 1e-5
+    p_ul_lo: float = 0.05
+    p_ul_hi: float = 0.15
+    p_dl_lo: float = 0.1
+    p_dl_hi: float = 0.3
+    k_min: int = 2
+
+
+def base_rate(power_w: jax.Array, pathloss_db: jax.Array, noise_w: float = NOISE_W) -> jax.Array:
+    """Shannon spectral efficiency log2(1 + P*g/N0), g = 10^(-PL/10)."""
+    gain = jnp.power(10.0, -pathloss_db / 10.0)
+    return jnp.log2(1.0 + power_w * gain / noise_w)
+
+
+def sample_client_counts(key, n: int, cfg: NetworkConfig) -> jax.Array:
+    k = cfg.mean_clients + jnp.sqrt(cfg.var_clients) * jax.random.normal(key, (n,))
+    return jnp.clip(jnp.round(k), cfg.k_min, None).astype(jnp.int32)
+
+
+def sample_services(
+    key: jax.Array,
+    n_services: int,
+    cfg: NetworkConfig = NetworkConfig(),
+    k_max: int | None = None,
+    client_counts: jax.Array | None = None,
+) -> tuple[ServiceSet, dict]:
+    """Draw a padded batch of services per §VI.A.  Returns (ServiceSet, meta).
+
+    meta carries the raw draws (sizes, rates, powers) for benchmarks that need
+    them (e.g. Table I reporting).  Shapes are rectangular (N, K_max) with a
+    validity mask derived from the sampled client counts.
+    """
+    keys = jax.random.split(key, 8)
+    if client_counts is None:
+        client_counts = sample_client_counts(keys[0], n_services, cfg)
+    client_counts = jnp.asarray(client_counts, dtype=jnp.int32)
+    if k_max is None:
+        k_max = int(jnp.max(client_counts))
+    mask = jnp.arange(k_max)[None, :] < client_counts[:, None]
+
+    shape = (n_services, k_max)
+    # Per-service average path loss, then per-client spread around it (Fig. 14).
+    pl_service = cfg.mean_pathloss_db + jnp.sqrt(cfg.var_pathloss_db) * jax.random.normal(
+        keys[1], (n_services, 1)
+    )
+    pl_clients = pl_service + jnp.sqrt(cfg.var_pathloss_client_db) * jax.random.normal(
+        keys[2], shape
+    )
+
+    size_mbit = jax.random.uniform(
+        keys[3], (n_services, 1), minval=cfg.model_mbit_lo, maxval=cfg.model_mbit_hi
+    )
+    p_ul = jax.random.uniform(keys[4], shape, minval=cfg.p_ul_lo, maxval=cfg.p_ul_hi)
+    p_dl = jax.random.uniform(keys[5], (n_services, 1), minval=cfg.p_dl_lo, maxval=cfg.p_dl_hi)
+    t_local = jax.random.uniform(keys[6], shape, minval=cfg.t_local_lo, maxval=cfg.t_local_hi)
+
+    r_dl = base_rate(p_dl, pl_clients, cfg.noise_w)
+    r_ul = base_rate(p_ul, pl_clients, cfg.noise_w)
+
+    alpha = size_mbit / r_dl + size_mbit / r_ul
+    t_comp = t_local + cfg.t_global
+    alpha = jnp.where(mask, alpha, 0.0).astype(jnp.float32)
+    t_comp = jnp.where(mask, t_comp, 0.0).astype(jnp.float32)
+
+    svc = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+    meta = {
+        "client_counts": client_counts,
+        "pathloss_db": pl_clients,
+        "size_mbit": size_mbit,
+        "r_dl": r_dl,
+        "r_ul": r_ul,
+        "p_ul": p_ul,
+        "p_dl": p_dl,
+        "t_local": t_local,
+    }
+    return svc, meta
+
+
+def table1_service_set(key: jax.Array, cfg: NetworkConfig = NetworkConfig()) -> tuple[ServiceSet, dict]:
+    """The representative period of §VI.B: 5 services with 10/12/14/16/18 clients."""
+    counts = jnp.array([10, 12, 14, 16, 18], dtype=jnp.int32)
+    return sample_services(key, 5, cfg, k_max=18, client_counts=counts)

@@ -1,0 +1,131 @@
+"""Core data structures for the multi-service FL bandwidth-allocation problem.
+
+Canonical units (matching the paper's §VI.A setup so that all quantities are
+O(1) in float32):
+
+  * bandwidth ........ MHz
+  * data sizes ....... Mbit
+  * base rates r ..... bit/s/Hz   (dimensionless spectral efficiency)
+  * times ............ seconds
+  * frequencies ...... rounds / second
+
+A *service* n is the paper's tuple <s_DT, {w_LC_k}, s_UT, w_GC> combined with its
+clients' channel state.  For allocation purposes only two per-client scalars
+matter (Eqns. 3-7):
+
+    alpha_{n,k} = s_DT/r_DT_k + s_UT/r_UT_k       [MHz * s]  (transmission load)
+    t_comp_{n,k} = w_LC_k/phi_k + w_GC/phi_n      [s]        (compute latency)
+
+Services are batched into rectangular (N, K_max) arrays with a validity mask so
+the solvers vectorize on TPU; padded slots carry alpha=0 and are excluded from
+maxima via the mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Fixed-trip bisection count.  48 halvings shrink any O(1) bracket to ~4e-15 of
+# its width -- far below float32 resolution, so the solve is exact-to-dtype.
+BISECT_ITERS = 48
+
+_NEG_INF = -1e30
+
+
+class ServiceSet(NamedTuple):
+    """A padded batch of FL services.
+
+    Attributes:
+      alpha:  (N, K) float -- per-client transmission load alpha_{n,k} [MHz*s].
+              Exactly 0 for padded client slots.
+      t_comp: (N, K) float -- per-client compute latency t^C_{n,k} [s].
+              Ignored (masked) for padded slots.
+      mask:   (N, K) bool  -- True for real clients.
+    """
+
+    alpha: jax.Array
+    t_comp: jax.Array
+    mask: jax.Array
+
+    @property
+    def n_services(self) -> int:
+        return self.alpha.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.alpha.shape[1]
+
+    def alpha_sum(self) -> jax.Array:
+        """Sum_k alpha_{n,k} -> (N,).  Padding contributes 0 by construction."""
+        return jnp.sum(self.alpha, axis=-1)
+
+    def t_comp_max(self) -> jax.Array:
+        """max_k t^C_{n,k} over valid clients -> (N,)."""
+        return jnp.max(jnp.where(self.mask, self.t_comp, _NEG_INF), axis=-1)
+
+    def client_counts(self) -> jax.Array:
+        return jnp.sum(self.mask, axis=-1)
+
+
+def make_service_set(alpha, t_comp, mask=None) -> ServiceSet:
+    alpha = jnp.asarray(alpha, dtype=jnp.float32)
+    t_comp = jnp.asarray(t_comp, dtype=jnp.float32)
+    if alpha.ndim == 1:
+        alpha, t_comp = alpha[None], t_comp[None]
+    if mask is None:
+        mask = jnp.ones(alpha.shape, dtype=bool)
+    else:
+        mask = jnp.asarray(mask, dtype=bool)
+        if mask.ndim == 1:
+            mask = mask[None]
+    alpha = jnp.where(mask, alpha, 0.0)
+    return ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+
+
+@dataclasses.dataclass(frozen=True)
+class RawServiceParams:
+    """Physical-layer description of one service before reduction to (alpha, t_comp).
+
+    All arrays are (K,) over this service's clients.
+    """
+
+    s_dl_mbit: float          # download payload s^DT_n  [Mbit]
+    s_ul_mbit: float          # upload payload  s^UT_n  [Mbit]
+    r_dl: jax.Array           # downlink base rate log2(1 + P_n g^dl_k / N0)
+    r_ul: jax.Array           # uplink base rate  log2(1 + P_k g^ul_k / N0)
+    t_local: jax.Array        # local-computation latency w^LC_{n,k} / phi_k  [s]
+    t_global: float           # aggregation latency w^GC_n / phi_n  [s]
+
+    def reduce(self) -> tuple[jax.Array, jax.Array]:
+        alpha = self.s_dl_mbit / self.r_dl + self.s_ul_mbit / self.r_ul
+        t_comp = self.t_local + self.t_global
+        return alpha, t_comp
+
+
+def stack_services(params: list[RawServiceParams], k_max: int | None = None) -> ServiceSet:
+    """Pad a heterogeneous list of services into one rectangular ServiceSet."""
+    reduced = [p.reduce() for p in params]
+    counts = [int(a.shape[0]) for a, _ in reduced]
+    k_pad = k_max if k_max is not None else max(counts)
+    n = len(params)
+    alpha = jnp.zeros((n, k_pad), dtype=jnp.float32)
+    t_comp = jnp.zeros((n, k_pad), dtype=jnp.float32)
+    mask = jnp.zeros((n, k_pad), dtype=bool)
+    for i, (a, tc) in enumerate(reduced):
+        k = counts[i]
+        alpha = alpha.at[i, :k].set(a.astype(jnp.float32))
+        t_comp = t_comp.at[i, :k].set(tc.astype(jnp.float32))
+        mask = mask.at[i, :k].set(True)
+    return ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+
+
+def round_time_given_alloc(svc: ServiceSet, b_clients: jax.Array) -> jax.Array:
+    """Round length t_n = max_k (t^C_{n,k} + alpha_{n,k}/b_{n,k}) for an arbitrary
+    (possibly suboptimal) per-client allocation.  Used by the Equal-Client
+    baseline and by tests.  b_clients: (N, K) MHz."""
+    safe_b = jnp.maximum(b_clients, 1e-30)
+    per_client = svc.t_comp + svc.alpha / safe_b
+    return jnp.max(jnp.where(svc.mask, per_client, _NEG_INF), axis=-1)

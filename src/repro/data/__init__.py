@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic token streams, deterministic shardable iterators,
+and Dirichlet non-IID federated partitioning."""
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLM,
+    dirichlet_partition,
+    federated_batches,
+)

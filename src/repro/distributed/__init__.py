@@ -1,0 +1,8 @@
+"""Distribution layer: per-architecture sharding rules (DP/FSDP/TP/EP/SP),
+hierarchical + compressed collectives, fault tolerance, elastic re-meshing."""
+from repro.distributed.sharding import (  # noqa: F401
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+)
+from repro.distributed import collectives, elastic, fault  # noqa: F401

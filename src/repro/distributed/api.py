@@ -1,0 +1,68 @@
+"""Mesh context for in-model sharding constraints.
+
+Model code is mesh-agnostic; launchers register the active mesh here and
+models pin critical intermediates with ``constrain(x, "batch", None,
+"vocab")`` using logical axis names.  With no mesh registered (unit tests,
+single-device runs) ``constrain`` is a no-op.
+
+Why this exists: GSPMD propagation alone picks a catastrophic strategy for
+the tied-embedding logits matmul's transpose -- it all-gathers the full-batch
+fp32 logits over the data axis (67 GB x2 per step on gemma-2b train_4k)
+instead of partial-summing the embed-sized gradient.  One constraint on the
+logits fixes the strategy (EXPERIMENTS.md §Perf, iteration 1).
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# logical name -> mesh axes (resolved against the registered mesh's names)
+_LOGICAL = {
+    "batch": ("pod", "data"),
+    "seq": ("data",),       # sequence-parallel residual stream
+    "model": ("model",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "expert": ("model",),
+    "ffn_shard": ("pod", "data"),  # serve-2D: expert/mlp hidden dim over data
+}
+
+
+def set_mesh(mesh: Mesh | None) -> None:
+    _STATE.mesh = mesh
+
+
+def get_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+def _resolve(name, mesh) -> tuple | None:
+    if name is None:
+        return None
+    axes = tuple(ax for ax in _LOGICAL[name] if ax in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain(x: jax.Array, *names: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without a mesh.
+    Dims whose size doesn't divide the axis product are left unconstrained."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, name in enumerate(names):
+        axes = _resolve(name, mesh)
+        if axes is None:
+            spec.append(None)
+            continue
+        n = 1
+        for ax in (axes if isinstance(axes, tuple) else (axes,)):
+            n *= mesh.shape[ax]
+        spec.append(axes if x.shape[dim] % n == 0 and x.shape[dim] >= n else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,54 @@
+"""Elastic scaling.
+
+Two elasticity mechanisms mirror each other across the stack:
+
+  * FL layer (the paper's own): the period structure re-solves the bandwidth
+    allocation whenever the active service set changes -- services join/leave
+    without disturbing survivors (repro.fl.simulator).
+  * Device layer: when nodes fail or join, ``remesh`` re-factors the
+    surviving device count into a (data, model) mesh (shrinking model
+    parallelism only when forced, since TP reshard moves more bytes than DP),
+    and ``reshard`` moves a checkpointed pytree onto the new mesh via
+    jax.device_put with freshly derived shardings.  Combined with
+    deterministic data and step-atomic checkpoints, an elastic restart is a
+    pure function of (checkpoint, new device count).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.distributed import sharding
+from repro.launch.mesh import make_elastic_mesh
+
+
+def remesh(n_devices: int, prefer_model_parallel: int = 16):
+    return make_elastic_mesh(n_devices, prefer_model_parallel)
+
+
+def reshard(cfg, params: Any, new_mesh) -> Any:
+    """Place an unsharded/checkpointed param pytree onto a new mesh using the
+    arch's sharding rules."""
+    sh = sharding.param_shardings(cfg, params, new_mesh)
+    return jax.device_put(params, sh)
+
+
+def _factor(n_devices: int, model_parallel: int) -> dict:
+    while model_parallel > 1 and n_devices % model_parallel != 0:
+        model_parallel //= 2
+    return {"data": n_devices // model_parallel, "model": model_parallel}
+
+
+def plan_service_remesh(n_devices_before: int, n_devices_after: int,
+                        model_parallel: int = 16) -> dict:
+    """Report of what an elastic transition changes (used by ops tooling and
+    tests): mesh shapes and which parallelism axis absorbs the change.
+    Pure arithmetic -- safe to call without the devices actually present."""
+    before = _factor(n_devices_before, model_parallel)
+    after = _factor(n_devices_after, model_parallel)
+    return {
+        "before": before,
+        "after": after,
+        "model_parallel_changed": before["model"] != after["model"],
+    }

@@ -1,0 +1,255 @@
+"""Per-architecture parameter / activation / cache sharding rules.
+
+Strategy (DESIGN.md §4):
+  * ``model`` axis (16): tensor parallelism -- attention QKV/output and MLP
+    up/down projections column/row split; MoE experts split across the axis
+    (EP); vocab + embedding sharded on the vocab dim.
+  * ``data`` axis (16): batch data parallelism + FSDP: parameters and
+    optimizer moments additionally sharded on their largest remaining dim
+    when divisible (ZeRO-3 style; GSPMD inserts the all-gathers).
+  * ``pod`` axis (2, multi-pod only): outer data parallelism -- gradient
+    all-reduce is the only cross-pod collective in steady state.
+
+Rules are name+shape driven: ``param_shardings`` walks the pytree and matches
+leaf path suffixes, checking divisibility before sharding any dim (falls back
+to replication, never mis-shards oddly-sized layers such as hymba's 25 heads
+or xlstm's 4).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# (path regex, candidate spec builder) -- first match wins.  Specs name the
+# *logical* roles; dims that don't divide are dropped to None at apply time.
+_COL = "col"   # shard last dim on model axis
+_ROW = "row"   # shard first (or matmul-in) dim on model axis
+_VOCAB = "vocab"        # (V, d): shard V on model; NEVER FSDP the d dim --
+_VOCAB_OUT = "vocab_out"  # sharding d over data makes the logits matmul
+#                           contraction-sharded and XLA all-reduces the FULL
+#                           (B,S,V/16) logits across data (measured 67 GB/op
+#                           on gemma-2b train_4k; see EXPERIMENTS.md §Perf).
+_EXPERT = "expert"
+_REPL = "repl"
+
+_RULES: list[tuple[str, str]] = [
+    # expert rule must precede the generic w_gate/w_up/w_down rules
+    (r"\['routed'\]\['w_\w+'\]$", _EXPERT),
+    (r"\['embed'\]$", _VOCAB),
+    (r"\['unembed'\]$", _VOCAB_OUT),
+    (r"\['w[qkv]'\]$", _COL),
+    (r"\['wq_[ab]'\]$", _COL),
+    (r"\['wkv_a'\]$", _COL),
+    (r"\['wkv_b'\]$", _COL),
+    (r"\['wo'\]$", _ROW),
+    (r"\['w_gate'\]$", _COL),
+    (r"\['w_up'\]$", _COL),
+    (r"\['w_down'\]$", _ROW),
+    (r"\['w_in'\]$", _COL),
+    (r"\['w_bc'\]$", _COL),
+    (r"\['w_dt'\]$", _COL),
+    (r"\['w_out'\]$", _ROW),
+    (r"\['w_mix_out'\]$", _ROW),
+    (r"\['w_qkv'\]$", _COL),
+    (r"\['w_if'\]$", _COL),
+    (r"\['w_zifo'\]$", _COL),
+    (r"\['router'\]$", _REPL),
+]
+
+
+def _divides(dim: int | None, n: int) -> bool:
+    return dim is not None and n > 1 and dim % n == 0 and dim >= n
+
+
+def _spec_for(role: str, shape: tuple[int, ...], mesh: Mesh,
+              data_axes: tuple[str, ...], fsdp: bool, serve_2d: bool) -> P:
+    model_n = mesh.shape["model"]
+    data_n = 1
+    for ax in data_axes:
+        data_n *= mesh.shape[ax]
+    ndim = len(shape)
+    spec: list[Any] = [None] * ndim
+    daxis = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def try_set(dim_idx: int, axis, axis_n: int) -> bool:
+        if spec[dim_idx] is None and _divides(shape[dim_idx], axis_n):
+            spec[dim_idx] = axis
+            return True
+        return False
+
+    # stacked layer params carry 1-2 leading scan dims; the matmul dims are
+    # the trailing ones.
+    last, first_mat = ndim - 1, max(ndim - 2, 0)
+    if role == _VOCAB:
+        try_set(first_mat, "model", model_n)      # (V, d): shard vocab
+        fsdp = False
+    elif role == _VOCAB_OUT:
+        try_set(last, "model", model_n)           # (d, V): shard vocab
+        fsdp = False
+    elif role == _COL:
+        try_set(last, "model", model_n)
+        if serve_2d:
+            # serving: weights stationary on BOTH axes -- the decode-sized
+            # activation psum is ~30x cheaper than per-layer FSDP weight
+            # all-gathers (EXPERIMENTS.md §Perf cell 1)
+            try_set(first_mat, daxis, data_n)
+            fsdp = False
+    elif role == _ROW:
+        try_set(first_mat, "model", model_n)
+        if serve_2d:
+            try_set(last, daxis, data_n)
+            fsdp = False
+    elif role == _EXPERT:
+        # (L?, E, d, f): expert dim = ndim-3
+        if ndim >= 3:
+            try_set(ndim - 3, "model", model_n)
+        if serve_2d:
+            try_set(last, daxis, data_n)
+            fsdp = False
+    # FSDP: shard one remaining (preferably large) dim over the data axes
+    if fsdp and data_n > 1:
+        order = sorted(range(ndim), key=lambda i: -shape[i])
+        for i in order:
+            if try_set(i, daxis, data_n):
+                break
+    return P(*spec)
+
+
+def param_shardings(
+    cfg: ModelConfig,
+    params_tree: Any,
+    mesh: Mesh,
+    *,
+    fsdp: bool | None = None,
+    serve_2d: bool = False,
+) -> Any:
+    """NamedSharding pytree matching ``params_tree`` (arrays or SDS).
+
+    serve_2d=True applies the serving layout: matmul weights sharded on both
+    (model, data) axes and never gathered (inference has no optimizer state,
+    and decode activations are tiny, so the 2D-TP partial-sum beats FSDP
+    gathers by the weight/activation size ratio)."""
+    import math as _math
+    data_axes = tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))
+    if fsdp is None:
+        total = sum(_math.prod(x.shape) for x in jax.tree.leaves(params_tree))
+        fsdp = total > 2_000_000_000 and not serve_2d
+
+    # TP-hostile archs (xlstm: 4 heads, head-blocked cells) gather activation-
+    # sized tensors on every layer under COL/ROW model sharding (measured
+    # 5.4 GB/chip/layer); pure-FSDP over (data x model) replaces that with
+    # weight gathers (~0.35 GB/layer) -- §Perf bonus cell 2.
+    fsdp_only = cfg.family == "ssm" and cfg.n_heads < mesh.shape.get("model", 1)
+    fsdp_axes = data_axes + ("model",) if fsdp_only else data_axes
+
+    def leaf_spec(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        role = _REPL
+        for pattern, r in _RULES:
+            if re.search(pattern, pstr):
+                role = r
+                break
+        if fsdp_only and role in (_COL, _ROW):
+            role = _REPL
+        spec = _spec_for(role, tuple(leaf.shape), mesh, fsdp_axes,
+                         fsdp or fsdp_only, serve_2d)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+def batch_shardings(cfg: ModelConfig, batch_tree: Any, mesh: Mesh) -> Any:
+    """Batch dim over (pod, data); M-RoPE position streams have batch at
+    index 1; everything else follows its leading dim.
+
+    TP-hostile archs (see param_shardings' fsdp_only) extend the batch onto
+    the otherwise-idle model axis -- pure 256-way DP + ZeRO; without this the
+    model-axis devices duplicate the full forward (measured 16x per-chip
+    FLOPs on xlstm train_4k)."""
+    data_axes = tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))
+    if cfg.family == "ssm" and cfg.n_heads < mesh.shape.get("model", 1):
+        # extend the batch onto the idle model axis ONLY when the global
+        # batch still divides (multi-pod: 256 % 512 != 0 -> keep (pod,data);
+        # replicating the batch would be far worse than idle model devices)
+        ext = data_axes + ("model",)
+        n_ext = 1
+        for ax in ext:
+            n_ext *= mesh.shape[ax]
+        sizes = {leaf.shape[0] for leaf in jax.tree.leaves(batch_tree)
+                 if leaf.ndim >= 1}
+        if sizes and all(s % n_ext == 0 and s >= n_ext for s in sizes):
+            data_axes = ext
+    axes = data_axes if len(data_axes) > 1 else data_axes[0]
+    data_n = 1
+    for ax in data_axes:
+        data_n *= mesh.shape[ax]
+
+    def leaf_spec(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        batch_dim = 1 if "positions" in pstr and len(leaf.shape) == 3 else 0
+        spec: list[Any] = [None] * len(leaf.shape)
+        if _divides(leaf.shape[batch_dim], data_n):
+            spec[batch_dim] = axes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, cache_tree: Any, mesh: Mesh) -> Any:
+    """KV/state caches: batch over (pod,data) when divisible, else the
+    sequence dim over (pod,data) (long-context batch=1 cells); kv-head or
+    latent dims over model when divisible."""
+    data_axes = tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))
+    axes = data_axes if len(data_axes) > 1 else data_axes[0]
+    data_n = 1
+    for ax in data_axes:
+        data_n *= mesh.shape[ax]
+    model_n = mesh.shape["model"]
+
+    def leaf_spec(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        spec: list[Any] = [None] * len(shape)
+        if not shape:  # the scalar "len"
+            return NamedSharding(mesh, P())
+        if ("'k'" in pstr or "'v'" in pstr or "xk" in pstr or "xv" in pstr
+                or "k_scale" in pstr or "v_scale" in pstr):
+            # (L, B, S, Hkv, Dh) or int8-scale (L, B, S, Hkv)
+            if _divides(shape[1], data_n):
+                spec[1] = axes
+            elif _divides(shape[2], data_n):
+                spec[2] = axes          # sequence-parallel cache (batch=1)
+            if len(shape) >= 4 and _divides(shape[3], model_n):
+                spec[3] = "model"
+            elif spec[2] is None and _divides(shape[2], model_n):
+                # kv heads don't divide the model axis (e.g. 8 heads / 16):
+                # split-KV decode -- shard the sequence dim over model; the
+                # attention softmax reduces over it with a psum (flash-
+                # decoding split-K, GSPMD edition).  Without this the cache
+                # replicates over model (21 GB/chip on command-r decode_32k).
+                spec[2] = "model"
+        elif "ckv" in pstr or "krope" in pstr:
+            # (L, B, S, R)
+            if _divides(shape[1], data_n):
+                spec[1] = axes
+            elif _divides(shape[2], data_n):
+                spec[2] = axes
+        else:
+            # recurrent states: (..., B, ...): find the batch dim by size
+            for i, s in enumerate(shape):
+                if _divides(s, data_n):
+                    spec[i] = axes
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

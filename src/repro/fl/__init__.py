@@ -1,0 +1,8 @@
+"""Federated-learning runtime: services (the paper's tuple abstraction over
+real architectures), client local training, FedAvg/FedProx servers with
+straggler mitigation, uplink gradient compression (feeds the allocator's
+s^UT), and the multi-period wall-clock simulator behind Figs. 11-15."""
+from repro.fl.service import FLService, arch_service_tuple  # noqa: F401
+from repro.fl.client import local_update  # noqa: F401
+from repro.fl.server import fedavg_round, make_fl_round_step  # noqa: F401
+from repro.fl import compression, simulator  # noqa: F401

@@ -1,0 +1,45 @@
+"""Client-side local training (the LC stage of the paper's round model).
+
+``local_update`` runs E local SGD steps on one client's data via lax.scan and
+returns the model delta -- the payload of the UT stage.  FedProx's proximal
+term (mu/2 ||w - w_global||^2) is supported for non-IID robustness; mu=0
+recovers FedAvg's plain local SGD.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def local_update(
+    loss_fn: Callable,
+    params,
+    batches,                 # pytree with leading (E, ...) axis: one batch/step
+    lr: float = 0.1,
+    prox_mu: float = 0.0,
+):
+    """Returns (delta, mean_loss).  delta = w_local_final - w_global."""
+    w_global = params
+
+    def grad_loss(p, batch):
+        def total(p_):
+            l = loss_fn(p_, batch)
+            if prox_mu > 0.0:
+                sq = sum(
+                    jnp.sum(jnp.square((a - b).astype(jnp.float32)))
+                    for a, b in zip(jax.tree.leaves(p_), jax.tree.leaves(w_global))
+                )
+                l = l + 0.5 * prox_mu * sq
+            return l
+        return jax.value_and_grad(total)(p)
+
+    def step(p, batch):
+        loss, g = grad_loss(p, batch)
+        p = jax.tree.map(lambda w, gr: (w - lr * gr).astype(w.dtype), p, g)
+        return p, loss
+
+    p_final, losses = jax.lax.scan(step, params, batches)
+    delta = jax.tree.map(lambda a, b: a - b, p_final, w_global)
+    return delta, jnp.mean(losses)

@@ -1,0 +1,66 @@
+"""Uplink gradient compression with error feedback.
+
+Compression shrinks the UT payload s^UT, which feeds straight back into the
+allocator's alpha_{n,k} = s^DT/r^DT + s^UT/r^UT -- the paper's tuple
+abstraction makes communication-efficiency methods and bandwidth allocation
+compose cleanly (DESIGN.md §3.5).
+
+Implemented: top-k magnitude sparsification (per-leaf) and symmetric int8
+quantization, both with client-held error-feedback residuals so the lossy
+round-trip error is re-injected next round (Karimireddy et al. style).
+``compression_ratio`` reports the s^UT multiplier the service plugs into
+``arch_service_tuple``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_sparsify(delta, k_frac: float, residual=None):
+    """Keep the top k_frac fraction (by magnitude) of each leaf.
+    Returns (sparse_delta, new_residual)."""
+    if residual is not None:
+        delta = jax.tree.map(lambda d, r: d + r.astype(d.dtype), delta, residual)
+
+    def one(x):
+        n = x.size
+        k = max(1, int(n * k_frac))
+        flat = x.reshape(-1)
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+        return kept.reshape(x.shape)
+
+    sparse = jax.tree.map(one, delta)
+    new_residual = jax.tree.map(lambda d, s: d - s, delta, sparse)
+    return sparse, new_residual
+
+
+def int8_quantize(delta, residual=None):
+    """Symmetric per-leaf int8 quantization.  Returns (dequantized, residual)."""
+    if residual is not None:
+        delta = jax.tree.map(lambda d, r: d + r.astype(d.dtype), delta, residual)
+
+    def one(x):
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127)
+        return q * scale
+
+    deq = jax.tree.map(one, delta)
+    new_residual = jax.tree.map(lambda d, s: d - s, delta, deq)
+    return deq, new_residual
+
+
+def compression_ratio(method: str, k_frac: float = 0.01,
+                      weight_bits: int = 32, index_bits: int = 32) -> float:
+    """s^UT multiplier vs dense fp32 upload."""
+    if method == "none":
+        return 1.0
+    if method == "int8":
+        return 8.0 / weight_bits
+    if method == "topk":
+        # values + indices for the kept entries
+        return k_frac * (weight_bits + index_bits) / weight_bits
+    if method == "topk_int8":
+        return k_frac * (8.0 + index_bits) / weight_bits
+    raise ValueError(method)

@@ -1,0 +1,84 @@
+"""Parameter-server side: synchronous FedAvg rounds with straggler
+mitigation, as one jit-able function.
+
+``make_fl_round_step`` builds the full round:
+    per-client local training (vmap over the client axis -- the axis that
+    shards over the mesh's ``data`` dimension at scale) ->
+    optional uplink compression ->
+    deadline-based straggler drop (clients whose simulated DT+LC+UT latency
+    exceeds the deadline are masked out of the aggregate; the paper's
+    synchronous model gates on the slowest *admitted* client) ->
+    weighted FedAvg aggregation -> server optimizer step.
+
+At mesh scale the client vmap axis is sharded over ``data`` and the
+aggregation's masked mean lowers to the psum the FL literature calls "the
+server" -- see DESIGN.md §3.5.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl import client as fl_client
+from repro.fl import compression as fl_comp
+
+
+def fedavg_round(deltas, weights):
+    """Weighted average of per-client deltas.  deltas: pytree with leading
+    client axis (C, ...); weights: (C,) (zero = dropped straggler)."""
+    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def agg(d):
+        w = weights.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
+        return jnp.sum(d * w, axis=0) / wsum.astype(d.dtype)
+
+    return jax.tree.map(agg, deltas)
+
+
+def make_fl_round_step(
+    loss_fn: Callable,
+    *,
+    local_steps: int = 1,
+    client_lr: float = 0.1,
+    server_lr: float = 1.0,
+    prox_mu: float = 0.0,
+    compression: str = "none",
+    topk_frac: float = 0.01,
+):
+    """Returns round(params, client_batches, client_weights) ->
+    (params, metrics).  client_batches leaves: (C, E, ...) -- C clients, E
+    local steps each."""
+
+    def one_client(params, batches):
+        delta, loss = fl_client.local_update(
+            loss_fn, params, batches, lr=client_lr, prox_mu=prox_mu
+        )
+        if compression == "topk":
+            delta, _ = fl_comp.topk_sparsify(delta, topk_frac)
+        elif compression == "int8":
+            delta, _ = fl_comp.int8_quantize(delta)
+        elif compression == "topk_int8":
+            delta, _ = fl_comp.topk_sparsify(delta, topk_frac)
+            delta, _ = fl_comp.int8_quantize(delta)
+        return delta, loss
+
+    def round_step(params, client_batches, client_weights):
+        deltas, losses = jax.vmap(one_client, in_axes=(None, 0))(params, client_batches)
+        agg = fedavg_round(deltas, client_weights)
+        new_params = jax.tree.map(
+            lambda p, d: (p + server_lr * d.astype(p.dtype)), params, agg
+        )
+        wsum = jnp.maximum(jnp.sum(client_weights), 1e-12)
+        mean_loss = jnp.sum(losses * client_weights) / wsum
+        return new_params, {"loss": mean_loss,
+                            "participating": jnp.sum(client_weights > 0)}
+
+    return round_step
+
+
+def straggler_weights(round_latencies: jax.Array, deadline: float) -> jax.Array:
+    """1.0 for clients meeting the deadline, 0.0 for stragglers.
+    round_latencies: (C,) simulated DT+LC+UT+GC times from the timing model."""
+    return (round_latencies <= deadline).astype(jnp.float32)

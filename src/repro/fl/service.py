@@ -1,0 +1,79 @@
+"""FL services: the paper abstracts a service to the tuple
+<s^DT, {w^LC_k}, s^UT, w^GC> (§III.A).  ``arch_service_tuple`` derives that
+tuple from any architecture config in the zoo -- download/upload payloads from
+the parameter footprint (optionally compressed), local work from the
+training-step FLOPs, aggregation work from the averaging cost -- making every
+assigned architecture a first-class FL service (DESIGN.md §3a).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import RawServiceParams
+from repro.models.config import ModelConfig
+
+MBIT = 1e6
+
+
+@dataclasses.dataclass
+class FLService:
+    """One live FL service in the network simulator."""
+
+    service_id: int
+    n_clients: int
+    rounds_required: int          # termination criterion (rounds to converge)
+    rounds_done: int = 0
+    periods_active: int = 0
+    arrived_period: int = 0
+
+    @property
+    def finished(self) -> bool:
+        return self.rounds_done >= self.rounds_required
+
+
+def model_bits(cfg: ModelConfig, weight_bits: int = 32, active_only: bool = False) -> float:
+    n = cfg.active_param_count() if active_only else cfg.param_count()
+    return float(n) * weight_bits
+
+
+def train_flops_per_token(cfg: ModelConfig) -> float:
+    """6*N_active*token approximation (fwd+bwd) -- the MODEL_FLOPS convention."""
+    return 6.0 * float(cfg.active_param_count())
+
+
+def arch_service_tuple(
+    cfg: ModelConfig,
+    *,
+    r_dl: jax.Array,
+    r_ul: jax.Array,
+    client_flops: jax.Array,
+    server_flops: float = 1e12,
+    tokens_per_round: int = 8192,
+    local_epochs: int = 1,
+    weight_bits: int = 32,
+    uplink_compression: float = 1.0,   # s^UT multiplier from repro.fl.compression
+) -> RawServiceParams:
+    """Instantiate the paper's service tuple for an architecture.
+
+    r_dl/r_ul: per-client base rates (bit/s/Hz); client_flops: per-client
+    compute speeds phi_k (FLOP/s).  Payloads are in Mbit to match the
+    allocator's canonical units.
+    """
+    bits = model_bits(cfg, weight_bits)
+    s_dl = bits / MBIT
+    s_ul = bits * uplink_compression / MBIT
+    w_lc = train_flops_per_token(cfg) * tokens_per_round * local_epochs
+    t_local = w_lc / jnp.asarray(client_flops)
+    k = r_dl.shape[0]
+    w_gc = float(cfg.param_count()) * k  # averaging adds
+    return RawServiceParams(
+        s_dl_mbit=float(s_dl),
+        s_ul_mbit=float(s_ul),
+        r_dl=r_dl,
+        r_ul=r_ul,
+        t_local=t_local,
+        t_global=w_gc / server_flops,
+    )

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots:
+
+  * bisect_alloc     -- batched intra-service water-filling (the paper's
+                        fleet-scale hot loop)
+  * flash_attention  -- causal / sliding-window attention (train + prefill)
+  * decode_attention -- flash-decoding vs long KV caches (serve_step)
+  * mlstm_chunk      -- chunkwise-parallel mLSTM cell (xlstm / hybrid)
+
+Each kernel has a pure-jnp oracle in ref.py and a dispatching wrapper in
+ops.py (compiled on TPU, interpret-mode in tests, ref fallback on CPU so the
+512-device dry-run lowers portably).
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,111 @@
+"""Flash-decoding attention for serve_step: one query token per sequence
+against a long KV cache.
+
+Grid: (B, Hkv, S_blocks) -- the cache-length dimension innermost with
+online-softmax scratch accumulators, so VMEM holds only one (BK, D) K/V tile
+at a time regardless of context length (the 500k-decode cells depend on
+this).  The G=Hq/Hkv query heads sharing a kv head are processed together:
+the score matmul is (G, D) x (D, BK), which keeps the MXU busy even at G=4.
+
+A dynamic ``valid_len`` masks the unwritten cache tail; blocks entirely past
+valid_len are skipped (decode cost scales with the *filled* cache, not the
+allocation).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BK = 512
+
+
+def _decode_kernel(
+    valid_ref,                       # SMEM (1,)
+    q_ref, k_ref, v_ref,             # (1, 1, G, D), (1, BK, 1, D), (1, BK, 1, D)
+    o_ref,                           # (1, 1, G, D)
+    acc_ref, m_ref, l_ref,           # scratch (G, D), (G, 1), (G, 1)
+    *,
+    bk: int,
+):
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+    valid_len = valid_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    g = q_ref.shape[2]
+    d = q_ref.shape[3]
+
+    @pl.when(ki * bk < valid_len)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32).reshape(g, d)
+        k = k_ref[...].astype(jnp.float32).reshape(bk, d)
+        v = v_ref[...].astype(jnp.float32).reshape(bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) / math.sqrt(d)                                       # (G, BK)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1) + ki * bk
+        s = jnp.where(cols < valid_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype).reshape(1, 1, g, d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,          # (B, Hq, D) -- one token per sequence
+    k: jax.Array,          # (B, S, Hkv, D) -- cache layout
+    v: jax.Array,
+    valid_len: jax.Array,  # () int32: filled cache length
+    *,
+    block_k: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bk = min(block_k, s)
+    assert s % bk == 0, (s, bk)
+
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, s // bk)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, hi, ki: (bi, ki, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.reshape(valid_len, (1,)).astype(jnp.int32), qg, k, v)
+    return out.reshape(b, hq, d)

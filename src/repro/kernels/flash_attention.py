@@ -1,0 +1,163 @@
+"""Flash attention (causal / sliding-window) as a Pallas TPU kernel.
+
+Grid: (batch*kv_heads, q_blocks, kv_blocks) with the kv dimension innermost;
+online-softmax accumulators live in VMEM scratch and persist across kv
+iterations (initialized at kv==start, flushed at kv==end).  Causal and
+sliding-window structure prunes the kv range per q block: the kernel only
+visits blocks intersecting [q_lo - window + 1, q_hi], which is what makes the
+sliding-window archs (gemma3, hymba) O(S*W) instead of O(S^2).
+
+GQA layout: q is (B, Hkv, G, S, D) -- G query heads share one kv head; the
+kernel computes all G at once per kv head, amortizing the k/v loads (the MXU
+matmul is (G*BQ, D) x (D, BK), hardware-aligned for D in {64, 128, 256}).
+
+VMEM budget per step (f32): q (G*BQ*D) + k,v (2*BK*D) + acc (G*BQ*D)
++ scores (G*BQ*BK); with BQ=BK=128, G<=8, D<=256 that is ~1.5 MB -- far under
+the ~16 MB/core budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,            # (1, G, BQ, D), (1, BK, D), (1, BK, D)
+    o_ref,                          # (1, G, BQ, D)
+    acc_ref, m_ref, l_ref,          # scratch: (G*BQ, D), (G*BQ, 1), (G*BQ, 1)
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    bq: int,
+    bk: int,
+    kv_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    g = q_ref.shape[1]
+    d = q_ref.shape[3]
+    g_bq = g * bq
+    # absolute positions: row r of the flattened (G, BQ) block is query
+    # qi*bq + (r % bq); columns are ki*bk + arange(bk)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (g_bq, bk), 0) % bq + qi * bq
+    cols = jax.lax.broadcasted_iota(jnp.int32, (g_bq, bk), 1) + ki * bk
+
+    mask = cols < kv_len
+    if causal:
+        mask &= rows >= cols
+    if window > 0:
+        mask &= rows - cols < window
+
+    def _compute():
+        q = q_ref[...].astype(jnp.float32).reshape(g_bq, d)
+        k = k_ref[...].astype(jnp.float32).reshape(bk, d)
+        v = v_ref[...].astype(jnp.float32).reshape(bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                             # (G*BQ, BK)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    if causal or window > 0:
+        # prune fully-masked blocks: need ki*bk <= q_hi and (window)
+        # ki*bk + bk - 1 >= q_lo - window + 1
+        q_lo = qi * bq
+        q_hi = qi * bq + bq - 1
+        live = (ki * bk) <= q_hi
+        if window > 0:
+            live &= (ki * bk + bk - 1) >= (q_lo - window + 1)
+        live_ = live
+
+        @pl.when(live_)
+        def _():
+            _compute()
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype).reshape(1, g, bq, d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,        # (B, Hq, Sq, D)
+    k: jax.Array,        # (B, Hkv, Skv, D)
+    v: jax.Array,        # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BQ,
+    block_k: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    scale = 1.0 / math.sqrt(d)
+
+    # (B*Hkv, G, Sq, D) -> blocks flattened to (G*BQ, D)
+    qg = q.reshape(b, hkv, g, sq, d).reshape(b * hkv, g, sq, d)
+    kg = k.reshape(b * hkv, skv, d)
+    vg = v.reshape(b * hkv, skv, d)
+
+    grid = (b * hkv, sq // bq, skv // bk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, kv_len=skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, bq, d), lambda bh, qi, ki: (bh, 0, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, bq, d), lambda bh, qi, ki: (bh, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * bq, d), jnp.float32),
+            pltpu.VMEM((g * bq, 1), jnp.float32),
+            pltpu.VMEM((g * bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        qg.reshape(b * hkv, g, sq, d),
+        kg, vg,
+    )
+    return out.reshape(b, hkv, g, sq, d).reshape(b, hq, sq, d)

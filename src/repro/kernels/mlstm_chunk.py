@@ -1,0 +1,137 @@
+"""Chunkwise-parallel mLSTM cell as a Pallas TPU kernel (xLSTM's matrix
+memory; also the SSD-style pattern Hymba's recurrent heads follow).
+
+Grid: (B*H, n_chunks) with the chunk dimension innermost; the recurrent state
+(C: (Dh, Dh), n: (Dh,), m: ()) lives in VMEM scratch and carries across chunk
+iterations -- the kernel is a sequential scan over chunks with O(L^2 + L*Dh)
+parallel work per chunk, matching ``repro.models.ssm.mlstm_chunkwise`` (its
+pure-jnp oracle) exactly.
+
+Numerics: all gate math in fp32; the decay matrix uses the running-max
+stabilizer from the xLSTM paper so exp() never overflows even for long
+sequences with saturated forget gates.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(
+    q_ref, k_ref, v_ref, i_ref, f_ref,   # (1, L, Dh) x3, (1, L) x2
+    y_ref,                               # (1, L, Dh)
+    c_ref, n_ref, m_ref,                 # scratch (Dh, Dh), (1, Dh), (1, 1)
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    l = q_ref.shape[1]
+    dh = q_ref.shape[2]
+    q = q_ref[...].astype(jnp.float32).reshape(l, dh) / math.sqrt(dh)
+    k = k_ref[...].astype(jnp.float32).reshape(l, dh)
+    v = v_ref[...].astype(jnp.float32).reshape(l, dh)
+    ig = i_ref[...].astype(jnp.float32).reshape(1, l)
+    fg = f_ref[...].astype(jnp.float32).reshape(1, l)
+
+    logf = jax.nn.log_sigmoid(fg)
+    bcum = jnp.cumsum(logf, axis=1)                    # (1, L)
+    m_prev = m_ref[0, 0]
+    C_prev = c_ref[...]
+    n_prev = n_ref[...]
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    tri = rows >= cols
+    intra_arg = bcum.reshape(l, 1) - bcum.reshape(1, l) + ig.reshape(1, l)
+    intra_arg = jnp.where(tri, intra_arg, NEG_INF)
+    m_intra = jnp.max(intra_arg, axis=1)               # (L,)
+    m_inter = bcum.reshape(l) + m_prev
+    m_t = jnp.maximum(jnp.maximum(m_inter, m_intra), NEG_INF)
+
+    g_inter = jnp.exp(m_inter - m_t).reshape(l, 1)
+    y_inter = jax.lax.dot_general(
+        q, C_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) * g_inter
+    n_inter = jax.lax.dot_general(
+        q, n_prev.reshape(dh, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * g_inter                                        # (L, 1)
+
+    dexp = jnp.exp(intra_arg - m_t.reshape(l, 1))
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    w = scores * dexp
+    y_intra = jax.lax.dot_general(
+        w, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    n_intra = jnp.sum(w, axis=1, keepdims=True)
+    denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t).reshape(l, 1))
+    y_ref[...] = ((y_inter + y_intra) / denom).astype(y_ref.dtype).reshape(1, l, dh)
+
+    # state to end of chunk
+    b_last = bcum[0, l - 1]
+    m_new = jnp.maximum(b_last + m_prev,
+                        jnp.max(b_last - bcum.reshape(l) + ig.reshape(l)))
+    scale_old = jnp.exp(b_last + m_prev - m_new)
+    kv_w = jnp.exp(b_last - bcum.reshape(l) + ig.reshape(l) - m_new)  # (L,)
+    kw = k * kv_w.reshape(l, 1)
+    c_ref[...] = scale_old * C_prev + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    n_ref[...] = scale_old * n_prev + jnp.sum(kw, axis=0, keepdims=True)
+    m_ref[...] = jnp.full_like(m_ref, m_new)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(
+    q: jax.Array,       # (B, H, S, Dh)
+    k: jax.Array,
+    v: jax.Array,
+    i_gate: jax.Array,  # (B, H, S)
+    f_gate: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, dh = q.shape
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    bh = b * h
+    resh3 = lambda x: x.reshape(bh, s, dh)
+    resh2 = lambda x: x.reshape(bh, s)
+    grid = (bh, s // l)
+    out = pl.pallas_call(
+        functools.partial(_mlstm_kernel, chunk=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, dh), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, l, dh), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, l, dh), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, l), lambda bh_, ci: (bh_, ci)),
+            pl.BlockSpec((1, l), lambda bh_, ci: (bh_, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, l, dh), lambda bh_, ci: (bh_, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(resh3(q), resh3(k), resh3(v), resh2(i_gate), resh2(f_gate))
+    return out.reshape(b, h, s, dh)

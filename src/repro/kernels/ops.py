@@ -1,0 +1,49 @@
+"""Jit'd public wrappers for the Pallas kernels with automatic backend
+dispatch: compiled Pallas on TPU, interpret mode when explicitly requested
+(tests), pure-jnp reference otherwise (CPU dry-run lowering uses the refs so
+the HLO stays portable)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.bisect_alloc import bisect_alloc
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_chunk import mlstm_chunk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=0, use_pallas=None, interpret=False):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=interpret or not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def attention_decode(q, k, v, valid_len, *, use_pallas=None, interpret=False):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return decode_attention(q, k, v, valid_len,
+                                interpret=interpret or not _on_tpu())
+    return ref.decode_attention_ref(q, k, v, valid_len)
+
+
+def intra_allocate(alpha, t_comp, b, *, use_pallas=None, interpret=False, iters=48):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return bisect_alloc(alpha, t_comp, b, iters=iters,
+                            interpret=interpret or not _on_tpu())
+    return ref.bisect_alloc_ref(alpha, t_comp, b, iters=iters)
+
+
+def mlstm(q, k, v, i_gate, f_gate, *, chunk=128, use_pallas=None, interpret=False):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return mlstm_chunk(q, k, v, i_gate, f_gate, chunk=chunk,
+                           interpret=interpret or not _on_tpu())
+    return ref.mlstm_chunk_ref(q, k, v, i_gate, f_gate)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` of each kernel).
+
+These are deliberately naive/direct implementations used only for
+correctness testing via assert_allclose in interpret mode.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D).  Materialized softmax."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k).astype(jnp.float32) / math.sqrt(d)
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= rows >= cols
+    if window > 0:
+        mask &= rows - cols < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return out.reshape(b, hq, sq, d)
+
+
+def decode_attention_ref(q, k, v, valid_len):
+    """q (B,Hq,D); k/v (B,S,Hkv,D); valid_len () or (B,) -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k).astype(jnp.float32) / math.sqrt(d)
+    valid = jnp.arange(s)[None, :] < jnp.reshape(valid_len, (-1, 1))
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v)
+    return out.reshape(b, hq, d)
+
+
+def bisect_alloc_ref(alpha, t_comp, b, iters: int = 48):
+    """Oracle for the intra-service allocation kernel: delegates to the core
+    solver (itself pure jnp, property-tested against KKT conditions)."""
+    from repro.core import intra
+    from repro.core.types import ServiceSet
+
+    mask = alpha > 0
+    svc = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+    t_star = intra.solve_round_time(svc, b, iters)
+    b_alloc = intra.client_allocation(svc, b, iters)
+    return t_star, b_alloc
+
+
+def mlstm_chunk_ref(q, k, v, i_gate, f_gate, chunk=None):
+    """Oracle for the chunked mLSTM kernel: the fully-parallel stabilized
+    form (exact for any chunking)."""
+    from repro.models import ssm
+
+    y, _, _ = ssm.mlstm_parallel(q, k, v, i_gate, f_gate)
+    return y

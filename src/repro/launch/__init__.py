@@ -1,0 +1,2 @@
+"""Launch layer: production mesh construction, the multi-pod dry-run, and
+end-to-end train/serve drivers."""

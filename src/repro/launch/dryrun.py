@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the module docstring sits below the XLA_FLAGS lines on purpose -- the
+# flag must be set before ANY jax import (jax locks the device count at first
+# init), and __future__ imports are therefore not used in this file.
+DOC = """Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell, builds the production mesh
+(single-pod 16x16 = 256 chips, or multi-pod 2x16x16 = 512), jits the step
+function with the arch's sharding rules, and proves the distribution config
+is coherent by running ``.lower().compile()`` on 512 host placeholder
+devices -- printing ``memory_analysis()`` (fits?) and ``cost_analysis()``
+(FLOPs/bytes for §Roofline), and summing the collective-op bytes from the
+post-SPMD HLO (not in cost_analysis).
+
+The XLA_FLAGS line above MUST run before any jax import -- jax locks the
+device count at first init.  Never set that flag globally: smoke tests and
+benchmarks must see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out artifacts/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.distributed import api as dist_api
+from repro.distributed import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.optim import adamw
+
+# v5e hardware constants for §Roofline (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.MULTILINE)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in the optimized HLO.
+    (-start async forms counted once; -done forms carry no shape of their own
+    that we match because they have no '(' pattern with an op name.)"""
+    out: dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shapes_txt = m.group(1) or m.group(2) or ""
+        op = m.group(3)
+        out[op] = out.get(op, 0) + _shape_bytes(shapes_txt)
+    return out
+
+
+def _split_micro(batch, micro: int):
+    """Reshape every batch leaf to (micro, B/micro, ...); M-RoPE positions
+    carry batch at axis 1."""
+    def f(path, x):
+        ax = 1 if ("positions" in jax.tree_util.keystr(path) and x.ndim == 3) else 0
+        b = x.shape[ax]
+        assert b % micro == 0, (b, micro)
+        moved = jnp.moveaxis(x, ax, 0)
+        out = moved.reshape(micro, b // micro, *moved.shape[1:])
+        return jnp.moveaxis(out, 1, ax + 1)
+
+    return jax.tree_util.tree_map_with_path(f, batch)
+
+
+def build_step(cfg, shape_name: str, microbatch: int = 1,
+               moment_dtype=None):
+    """Returns (step_fn, example_args (SDS pytree), donate) for the cell.
+
+    microbatch > 1 runs gradient accumulation: the global batch is split into
+    ``microbatch`` sequential micro-steps inside one jit -- activation
+    checkpoints shrink by the same factor (the memory-term hillclimb lever
+    for the big train cells; EXPERIMENTS.md §Perf)."""
+    model = registry.build_model(cfg)
+    seq, batch, kind = registry.SHAPES[shape_name]
+    specs = registry.input_specs(cfg, shape_name)
+    params_sds = registry.param_specs(cfg)
+
+    if kind == "train":
+        init_opt, update = adamw(
+            lr=1e-4, weight_decay=0.1, max_grad_norm=1.0,
+            moment_dtype=moment_dtype or jnp.float32)
+        opt_sds = jax.eval_shape(init_opt, params_sds)
+
+        if microbatch <= 1:
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(model.loss)(params, batch)
+                params, opt_state = update(grads, opt_state, params)
+                return params, opt_state, loss
+        else:
+            def train_step(params, opt_state, batch):
+                micro = _split_micro(batch, microbatch)
+
+                def body(carry, mb):
+                    loss_acc, g_acc = carry
+                    loss, g = jax.value_and_grad(model.loss)(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b_: a + b_.astype(a.dtype), g_acc, g)
+                    return (loss_acc + loss, g_acc), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    body, (jnp.zeros((), jnp.float32), zeros), micro)
+                grads = jax.tree.map(lambda g: g / microbatch, grads)
+                params, opt_state = update(grads, opt_state, params)
+                return params, opt_state, loss / microbatch
+
+        return train_step, (params_sds, opt_sds, specs["batch"]), (0, 1), kind
+
+    # serving: bf16 weights (deployments quantize; halves HBM + any movement)
+    params_sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype),
+        params_sds)
+
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, max_len=seq)
+
+        return prefill_step, (params_sds, specs["batch"]), (), kind
+
+    # decode
+    cache_sds = specs["cache"]
+    if cfg.mrope_sections:
+        def decode_step(params, cache, tokens, positions):
+            return model.decode_step(params, cache, tokens, positions=positions)
+        args = (params_sds, cache_sds, specs["tokens"], specs["positions"])
+    else:
+        def decode_step(params, cache, tokens):
+            return model.decode_step(params, cache, tokens)
+        args = (params_sds, cache_sds, specs["tokens"])
+    return decode_step, args, (1,), kind
+
+
+def shardings_for(cfg, mesh, args, kind, serve_2d: bool = True):
+    """in_shardings matching build_step's argument order.  Serve cells use
+    the stationary 2D-TP weight layout (see sharding.param_shardings)."""
+    params_sh = sharding.param_shardings(
+        cfg, args[0], mesh, serve_2d=serve_2d and kind != "train")
+    if kind == "train":
+        opt_sh = sharding.param_shardings(cfg, args[1], mesh)
+        batch_sh = sharding.batch_shardings(cfg, args[2], mesh)
+        return (params_sh, opt_sh, batch_sh)
+    if kind == "prefill":
+        return (params_sh, sharding.batch_shardings(cfg, args[1], mesh))
+    cache_sh = sharding.cache_shardings(cfg, args[1], mesh)
+    rest = tuple(sharding.batch_shardings(cfg, a, mesh) for a in args[2:])
+    return (params_sh, cache_sh) + rest
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             microbatch: int = 1, moment_dtype=None) -> dict:
+    cfg = configs.get_config(arch)
+    if not registry.supports(cfg, shape_name):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "full-attention arch; long_500k needs sub-quadratic "
+                          "attention (DESIGN.md §Arch-applicability)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    step_fn, args, donate, kind = build_step(cfg, shape_name, microbatch,
+                                             moment_dtype)
+    in_sh = shardings_for(cfg, mesh, args, kind)
+
+    dist_api.set_mesh(mesh)
+    try:
+        t0 = time.time()
+        jitted = jax.jit(step_fn, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    finally:
+        dist_api.set_mesh(None)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_chips": int(n_chips),
+        "status": "ok",
+        "kind": kind,
+        "microbatch": microbatch,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)) if cost else None,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)) if cost else None,
+        "collective_bytes": coll,
+        "collective_bytes_total": int(sum(coll.values())),
+        "hlo_collective_ops": {k: hlo.count(f" {k}") for k in
+                               ("all-reduce", "all-gather", "reduce-scatter",
+                                "all-to-all", "collective-permute")},
+    }
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                result[attr] = int(v)
+    # raw per-chip roofline terms (seconds); the HLO quantities of the SPMD
+    # module are already per-partition, and scan bodies are counted once --
+    # benchmarks/roofline.py applies the scan-trip correction before these
+    # feed §Roofline.
+    if result.get("flops"):
+        result["compute_term_s"] = result["flops"] / PEAK_FLOPS
+    if result.get("bytes_accessed"):
+        result["memory_term_s"] = result["bytes_accessed"] / HBM_BW
+    result["collective_term_s"] = result["collective_bytes_total"] / ICI_BW
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(registry.SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+
+    archs = configs.ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    shapes = list(registry.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[cell] {tag} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape_name, multi, args.microbatch)
+                except Exception as e:  # noqa: BLE001 -- record and continue
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" compile={res['compile_s']}s flops={res.get('flops'):.3e}"
+                             f" coll={res['collective_bytes_total']:.3e}B")
+                print(f"[done] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Architecture zoo: dense / MoE / MLA / SSM / hybrid / enc-dec model families
+with scan-over-layers stacks, KV/state caches, and dry-run input specs."""
+from repro.models.config import ModelConfig, reduced  # noqa: F401
+from repro.models.registry import (  # noqa: F401
+    SHAPES,
+    build_model,
+    input_specs,
+    param_specs,
+    supports,
+)

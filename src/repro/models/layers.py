@@ -1,0 +1,317 @@
+"""Shared neural-network layers for the architecture zoo.
+
+Pure-JAX (no flax): parameters are nested dicts of arrays, initialized by
+``init_*`` functions and consumed by the matching ``apply`` functions.  All
+layers take an explicit compute ``dtype`` (params are stored in fp32 and cast
+at use -- standard mixed precision).
+
+Conventions:
+  * activations: (batch, seq, d_model)
+  * attention heads: q (B, S, Hq, Dh); k/v (B, S, Hkv, Dh) with Hq % Hkv == 0
+  * weights: (in_features, out_features) so forward is x @ w
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initializers.
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None) -> jax.Array:
+    s = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * s)
+
+
+def embed_init(key, vocab: int, d_model: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d_model), dtype=jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Normalization.
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + multimodal M-RoPE).
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> (cos, sin) of shape (..., dim//2), fp32."""
+    half = dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S).  Rotates the full head dim."""
+    b, s, h, d = x.shape
+    cos, sin = _rope_angles(positions, d, theta)      # (B, S, D/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_partial_rope(x: jax.Array, positions: jax.Array, rope_dim: int,
+                       theta: float = 10_000.0) -> jax.Array:
+    """Rotate only the first ``rope_dim`` features of the head (DeepSeek MLA)."""
+    rot, keep = x[..., :rope_dim], x[..., rope_dim:]
+    return jnp.concatenate([apply_rope(rot, positions, theta), keep], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 10_000.0) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): ``positions`` is (3, B, S) carrying
+    (temporal, height, width) indices; the head dim's frequency bands are
+    partitioned into ``sections`` (in half-dim units, sum = D/2), each band
+    rotated by its own position stream."""
+    b, s, h, d = x.shape
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # pick, per frequency band, which of the 3 position streams drives it
+    stream_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )                                                   # (half,)
+    pos = positions.astype(jnp.float32)                 # (3, B, S)
+    pos_sel = pos[stream_id]                            # (half, B, S)
+    ang = jnp.transpose(pos_sel, (1, 2, 0)) * freq      # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention.
+# ---------------------------------------------------------------------------
+
+def make_attention_mask(
+    q_len: int,
+    kv_len: int,
+    q_offset: jax.Array | int = 0,
+    causal: bool = True,
+    window: int = 0,
+    kv_valid_len: jax.Array | None = None,
+    window_active: jax.Array | None = None,
+) -> jax.Array:
+    """(q_len, kv_len) bool mask.  ``q_offset`` is the absolute position of the
+    first query (decode: q_offset = cache length).  ``window`` > 0 restricts to
+    a sliding window of that many past positions.  ``kv_valid_len`` masks the
+    unwritten tail of a KV cache.  ``window_active`` (traced bool scalar)
+    toggles the window per layer inside a scan over mixed local/global layers
+    (None = window unconditionally applied when window > 0)."""
+    q_pos = jnp.arange(q_len) + q_offset          # absolute query positions
+    kv_pos = jnp.arange(kv_len)
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window > 0:
+        in_window = q_pos[:, None] - kv_pos[None, :] < window
+        if window_active is None:
+            mask &= in_window
+        else:
+            mask &= jnp.logical_or(jnp.logical_not(window_active), in_window)
+    if kv_valid_len is not None:
+        mask &= kv_pos[None, :] < kv_valid_len
+    return mask
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array | None,
+    *,
+    scale: float | None = None,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Grouped-query attention.  q (B,Sq,Hq,D), k/v (B,Skv,Hkv,D) -> (B,Sq,Hq,D).
+
+    Softmax runs in fp32 regardless of input dtype.
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    s = (1.0 / math.sqrt(d)) if scale is None else scale
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * s
+    if logit_softcap > 0.0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, dv)
+
+
+def init_attention(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), jnp.float32)
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((head_dim,), jnp.float32)
+    return p
+
+
+def project_qkv(p: Params, x: jax.Array, n_heads: int, n_kv_heads: int, head_dim: int,
+                dtype) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = x @ p["wq"].astype(dtype)
+    k = x @ p["wk"].astype(dtype)
+    v = x @ p["wv"].astype(dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv_heads, head_dim)
+    v = v.reshape(b, s, n_kv_heads, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    kv_valid_len: jax.Array | None = None,
+    window_active: jax.Array | None = None,
+    scale: float | None = None,
+    logit_softcap: float = 0.0,
+    chunk_size: int = 1024,
+) -> jax.Array:
+    """Query-chunked attention: O(chunk * S_kv) score memory instead of
+    O(S_q * S_kv).  Masks are built inline from iota comparisons (never
+    materialized as model inputs).  This is also the pure-jnp oracle for the
+    Pallas flash-attention kernel."""
+    b, sq, hq, d = q.shape
+    if sq <= chunk_size:
+        mask = make_attention_mask(sq, k.shape[1], q_offset, causal, window,
+                                   kv_valid_len, window_active)
+        return attention(q, k, v, mask, scale=scale, logit_softcap=logit_softcap)
+    assert sq % chunk_size == 0, (sq, chunk_size)
+    n_chunks = sq // chunk_size
+    qs = q.reshape(b, n_chunks, chunk_size, hq, d).transpose(1, 0, 2, 3, 4)
+
+    def one_chunk(i, q_chunk):
+        off = q_offset + i * chunk_size
+        mask = make_attention_mask(chunk_size, k.shape[1], off, causal, window,
+                                   kv_valid_len, window_active)
+        return attention(q_chunk, k, v, mask, scale=scale, logit_softcap=logit_softcap)
+
+    # remat each chunk: otherwise the backward saves every chunk's (BQ, Skv)
+    # score matrix simultaneously, re-materializing the full S^2 attention
+    # the chunking was meant to avoid (measured 8.6 GB/layer/chip on
+    # deepseek-v2 train_4k -- EXPERIMENTS.md §Perf)
+    one_chunk = jax.checkpoint(one_chunk)
+    out = jax.lax.map(lambda args: one_chunk(*args), (jnp.arange(n_chunks), qs))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff),
+            "w_up": dense_init(ks[1], d_model, d_ff),
+            "w_down": dense_init(ks[2], d_ff, d_model),
+        }
+    return {  # plain gelu MLP
+        "w_up": dense_init(ks[0], d_model, d_ff),
+        "w_down": dense_init(ks[1], d_ff, d_model),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array, kind: str, dtype) -> jax.Array:
+    if kind == "swiglu":
+        act = jax.nn.silu(x @ p["w_gate"].astype(dtype))
+        return (act * (x @ p["w_up"].astype(dtype))) @ p["w_down"].astype(dtype)
+    if kind == "geglu":
+        act = jax.nn.gelu(x @ p["w_gate"].astype(dtype), approximate=True)
+        return (act * (x @ p["w_up"].astype(dtype))) @ p["w_down"].astype(dtype)
+    if kind == "gelu":
+        return jax.nn.gelu(x @ p["w_up"].astype(dtype), approximate=True) @ p["w_down"].astype(dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Losses.
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token loss.  logits (B,S,V) any float dtype; labels (B,S) int.
+
+    The gold logit is extracted with a one-hot dot (not take_along_axis):
+    under a vocab-sharded ``model`` axis the one-hot compare stays local and
+    reduces with a tiny psum, whereas a gather on the sharded dim forces XLA
+    to all-gather the full logits (measured: ~140 GB/step on gemma-2b
+    train_4k before this change -- see EXPERIMENTS.md §Perf)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    onehot = (labels[..., None] == jnp.arange(vocab)[None, None, :])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

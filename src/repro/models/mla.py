@@ -1,0 +1,152 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries go through a low-rank bottleneck (q_lora_rank); keys/values are
+compressed into a single latent c_kv of dim kv_lora_rank plus one shared
+RoPE key head of dim rope_head_dim.  The decode cache stores only
+(c_kv, k_rope) -- ~(512+64) floats/token instead of 2*H*Dh -- which is the
+architecture's point: O(9x) smaller KV cache at 128 heads.
+
+Per-head dims: qk = head_dim (nope part) + rope_head_dim; v = v_head_dim.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import api as dist_api
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk_nope, qk_rope, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": layers.dense_init(ks[0], d, cfg.q_lora_rank),
+        "q_a_norm": jnp.zeros((cfg.q_lora_rank,), jnp.float32),
+        "wq_b": layers.dense_init(ks[1], cfg.q_lora_rank, h * (qk_nope + qk_rope)),
+        "wkv_a": layers.dense_init(ks[2], d, cfg.kv_lora_rank + qk_rope),
+        "kv_a_norm": jnp.zeros((cfg.kv_lora_rank,), jnp.float32),
+        "wkv_b": layers.dense_init(ks[3], cfg.kv_lora_rank, h * (qk_nope + dv)),
+        "wo": layers.dense_init(ks[4], h * dv, d),
+    }
+
+
+def _project_q(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    b, s, _ = x.shape
+    h, qk_nope, qk_rope = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    dtype = x.dtype
+    q = layers.rms_norm(x @ p["wq_a"].astype(dtype), p["q_a_norm"])
+    q = (q @ p["wq_b"].astype(dtype)).reshape(b, s, h, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _compress_kv(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """x -> (c_kv (B,S,R), k_rope (B,S,1,Dr)) -- exactly what the cache stores."""
+    dtype = x.dtype
+    kv = x @ p["wkv_a"].astype(dtype)
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = layers.rms_norm(c_kv, p["kv_a_norm"])
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _expand_kv(p: Params, c_kv: jax.Array, cfg: ModelConfig):
+    """latent (B,S,R) -> k_nope (B,S,H,Dn), v (B,S,H,Dv) via the up-projection."""
+    b, s, _ = c_kv.shape
+    h, qk_nope, dv = cfg.n_heads, cfg.head_dim, cfg.v_head_dim
+    kv = (c_kv @ p["wkv_b"].astype(c_kv.dtype)).reshape(b, s, h, qk_nope + dv)
+    return kv[..., :qk_nope], kv[..., qk_nope:]
+
+
+def apply_mla(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    cache_ckv: jax.Array | None = None,   # (B, Smax, R)
+    cache_krope: jax.Array | None = None,  # (B, Smax, Dr)
+    cache_len: jax.Array | None = None,
+    chunk_size: int = 1024,
+):
+    """Returns (out, new_cache_ckv, new_cache_krope).
+
+    Without a cache: training/prefill over the full sequence.
+    With a cache: the current x tokens are appended at cache_len and attention
+    runs against the whole (compressed) cache, decompressing k/v on the fly --
+    the MLA trade of extra up-projection FLOPs for tiny KV storage.
+    """
+    b, s, _ = x.shape
+    dtype = x.dtype
+    h, qk_nope, qk_rope, dv = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q = _project_q(p, x, cfg, positions)
+    c_kv_new, k_rope_new = _compress_kv(p, x, cfg, positions)
+
+    if cache_ckv is None:
+        c_kv_all, k_rope_all = c_kv_new, k_rope_new
+        kv_valid, q_offset = None, 0
+        new_ckv = new_krope = None
+    else:
+        new_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_kv_new, cache_len, axis=1)
+        new_krope = jax.lax.dynamic_update_slice_in_dim(
+            cache_krope, k_rope_new[:, :, 0, :], cache_len, axis=1
+        )
+        c_kv_all, k_rope_all = new_ckv, new_krope[:, :, None, :]
+        kv_valid, q_offset = cache_len + s, cache_len
+
+    if cache_ckv is not None and s <= 4:
+        # ---- absorbed decode path (the DeepSeek-V2 inference optimization) --
+        # Instead of decompressing the whole cache to per-head k/v
+        # (2*B*S*R*H*(Dn+Dv) FLOPs per step -- measured 110x the useful work
+        # at 32k context; EXPERIMENTS.md §Perf cell 1), fold wkv_b into the
+        # query/output sides and attend directly in the latent space:
+        #   q_nope^T k_nope = (q_nope W_UK)^T c_kv     (absorb into q)
+        #   out = (probs @ c_kv) W_UV                  (absorb into o)
+        w_kv = p["wkv_b"].astype(dtype).reshape(cfg.kv_lora_rank, h, qk_nope + dv)
+        w_uk, w_uv = w_kv[..., :qk_nope], w_kv[..., qk_nope:]
+        q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)       # (B,s,H,R)
+        scale = 1.0 / math.sqrt(qk_nope + qk_rope)
+        # The dots accumulate in f32; the CPU backend emulates bf16 dots by
+        # upconverting operands, and GSPMD then model-shards that convert and
+        # all-gathers it back (2 x 0.54 GB/chip/layer measured).  Pinning the
+        # converted cache to its (batch@data, replicated) layout removes the
+        # gather on both backends (§Perf cell 1, iteration 1.3).
+        c_kv_att = dist_api.constrain(
+            c_kv_all.astype(jnp.float32), "batch", None, None)
+        k_rope_att = dist_api.constrain(
+            new_krope.astype(jnp.float32), "batch", None, None)
+        logits = (
+            jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32), c_kv_att)
+            + jnp.einsum("bshn,btn->bhst", q_rope.astype(jnp.float32), k_rope_att)
+        ) * scale
+        mask = layers.make_attention_mask(
+            s, c_kv_all.shape[1], q_offset=q_offset, causal=True,
+            kv_valid_len=kv_valid)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv_att).astype(dtype)
+        out = jnp.einsum("bshr,rhn->bshn", out_lat, w_uv)        # (B,s,H,Dv)
+        out = out.reshape(b, s, h * dv) @ p["wo"].astype(dtype)
+        return out, new_ckv, new_krope
+
+    k_nope, v = _expand_kv(p, c_kv_all, cfg)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_all, (*k_nope.shape[:3], qk_rope))], axis=-1
+    )
+    out = layers.chunked_attention(
+        q, k, v,
+        causal=True, q_offset=q_offset, kv_valid_len=kv_valid,
+        scale=1.0 / math.sqrt(qk_nope + qk_rope), chunk_size=chunk_size,
+    )
+    out = out.reshape(b, s, h * dv) @ p["wo"].astype(dtype)
+    return out, new_ckv, new_krope

@@ -1,0 +1,262 @@
+"""Mixture-of-Experts layer with TPU-friendly sort-scatter dispatch.
+
+Used by llama4-maverick (128 routed top-1 + 1 shared, alternating layers) and
+deepseek-v2 (160 routed top-6 + 2 shared, fine-grained d_ff).
+
+Dispatch strategy (static shapes, EP-shardable):
+  1. router logits -> top-k expert ids + combine weights per token,
+  2. tokens sorted by expert id (stable argsort),
+  3. each token is scattered into its expert's capacity-C row buffer
+     (slots past C are dropped -- GShard-style capacity),
+  4. one batched einsum runs all experts' MLPs: (E, C, d) x (E, d, f),
+  5. results gathered back and combined with the routing weights.
+
+The (E, C, d) buffer's expert axis is the EP sharding axis: with experts
+split over the ``model`` mesh axis, step 4 is fully local and the scatter /
+gather in steps 3/5 lower to an all-to-all -- the canonical MoE pattern.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import api as dist_api
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": layers.dense_init(ks[0], d, e),
+        "routed": {
+            "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale,
+            "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale,
+            "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * (1.0 / jnp.sqrt(f)),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.init_mlp(
+            ks[4], d, cfg.d_ff_expert * cfg.n_shared_experts, cfg.mlp_kind
+        )
+    return p
+
+
+def _capacity(n_tokens: int, k: int, n_experts: int, factor: float) -> int:
+    cap = int(n_tokens * k * factor / n_experts)
+    return max(8, (cap + 7) // 8 * 8)  # pad to a lane-friendly multiple
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B,S,d), aux_loss ()).
+
+    aux_loss is the standard load-balancing loss (mean_prob * mean_assignment
+    dot, scaled by E) -- returned for the training objective.
+
+    With a registered mesh whose ``model`` axis divides E, dispatch runs on
+    the explicit expert-parallel shard_map path (``_apply_moe_ep``): GSPMD
+    lowers the scatter-into-expert-buffers of the generic path to
+    partial-sum + all-reduce of the FULL (E*C, d) buffer (measured
+    57 GB/chip/layer on deepseek-v2 train_4k), whereas the EP path's only
+    cross-shard traffic is one (T_local, d) psum over ``model``
+    (EXPERIMENTS.md §Perf cell 2).
+    """
+    mesh = dist_api.get_mesh()
+    t_tokens = x.shape[0] * x.shape[1]
+    if (mesh is not None and "model" in mesh.axis_names
+            and cfg.n_experts % mesh.shape["model"] == 0
+            and t_tokens % _data_size(mesh) == 0
+            and t_tokens >= 8 * cfg.n_experts):
+        # EP shard_map pays off when the token buffers dominate; decode-sized
+        # calls (T ~ batch) stay on the generic path where the 2D-TP expert
+        # weights remain stationary.
+        return _apply_moe_ep(p, x, cfg, mesh)
+    dtype = x.dtype
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.n_experts_per_token
+    e = cfg.n_experts
+    cap = _capacity(t, k, e, cfg.capacity_factor)
+
+    xt = x.reshape(t, d)
+    router_logits = (xt @ p["router"].astype(dtype)).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)                        # (T, k)
+    # DeepSeek-style renormalized top-k combine weights.
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # ---- load-balancing aux loss (Switch/GShard form) ----
+    me = jnp.mean(probs, axis=0)                                           # (E,)
+    assign_onehot = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(assign_onehot, axis=0)
+    aux_loss = e * jnp.sum(me * ce)
+
+    # ---- sort-scatter dispatch ----
+    flat_expert = expert_ids.reshape(-1)                                   # (T*k,)
+    token_idx = jnp.repeat(jnp.arange(t), k)                               # (T*k,)
+    slot_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = token_idx[order]
+    sorted_gate = slot_gate[order]
+    # position of each sorted slot within its expert group
+    group_start = jnp.searchsorted(sorted_expert, jnp.arange(e), side="left")
+    pos_in_expert = jnp.arange(t * k) - group_start[sorted_expert]
+    keep = pos_in_expert < cap                                             # capacity drop
+    dest = sorted_expert * cap + jnp.where(keep, pos_in_expert, 0)
+
+    buf = jnp.zeros((e * cap, d), dtype=dtype)
+    # keep the gathered token values sharded along the token dim -- without
+    # the constraint GSPMD replicates this (T*k, d) tensor on every chip
+    # (measured 128 GB/chip on deepseek-v2 train_4k; EXPERIMENTS.md §Perf)
+    gathered = dist_api.constrain(xt[sorted_token], "batch", None)
+    gathered = gathered * keep[:, None].astype(dtype)
+    buf = buf.at[dest].add(jnp.where(keep[:, None], gathered, 0.0))
+    buf = dist_api.constrain(buf.reshape(e, cap, d), "expert", None, None)
+
+    # ---- expert MLPs: one grouped einsum over the expert axis ----
+    w_gate = p["routed"]["w_gate"].astype(dtype)
+    w_up = p["routed"]["w_up"].astype(dtype)
+    w_down = p["routed"]["w_down"].astype(dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", buf, w_up
+    )
+    # (tried and refuted: constraining h's hidden dim to the f@data expert
+    # weight sharding did not remove the w_down gather on this backend and
+    # added a small all-to-all -- §Perf cell 1, iteration 1.4)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, w_down)
+    expert_out = dist_api.constrain(expert_out, "expert", None, None)
+    expert_out = expert_out.reshape(e * cap, d)
+
+    # ---- gather back + combine ----
+    slot_out = dist_api.constrain(expert_out[dest], "batch", None)
+    slot_out = slot_out * (sorted_gate * keep)[:, None].astype(dtype)
+    out = jnp.zeros((t, d), dtype=dtype).at[sorted_token].add(slot_out)
+    out = dist_api.constrain(out, "batch", None)
+
+    if "shared" in p:
+        out = out + layers.apply_mlp(p["shared"], xt, cfg.mlp_kind, dtype)
+    return out.reshape(b, s, d), aux_loss
+
+
+def _data_size(mesh) -> int:
+    n = 1
+    for ax in mesh.axis_names:
+        if ax in ("pod", "data"):
+            n *= mesh.shape[ax]
+    return n
+
+
+def _apply_moe_ep(p: Params, x: jax.Array, cfg: ModelConfig, mesh):
+    """Expert-parallel dispatch under shard_map.
+
+    Tokens are sharded over (pod, data) and replicated over ``model``; each
+    model shard owns E/model_n experts.  Every device locally selects, from
+    its resident tokens, the slots routed to ITS experts (local sort-scatter
+    with per-(data-shard, expert) capacity), runs its experts, scatters the
+    results back to token positions, and a single psum over ``model``
+    combines the per-shard sparse outputs -- each token's expert lives on
+    exactly one model shard, so the sum is exact.  Cross-device traffic per
+    layer: one (T_local, d) all-reduce over model (plus the routing psum for
+    the aux loss), replacing the generic path's full-buffer all-reduce.
+    """
+    dtype = x.dtype
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.n_experts_per_token
+    e = cfg.n_experts
+    model_n = mesh.shape["model"]
+    e_loc = e // model_n
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    data_spec = data_axes if len(data_axes) > 1 else data_axes[0]
+    data_n = _data_size(mesh)
+    t_loc = t // data_n
+    cap = _capacity(t_loc, k, e, cfg.capacity_factor)
+
+    def local_fn(xt, router, w_gate, w_up, w_down):
+        # xt (T_loc, d); router (d, E); w_* (E_loc, d|f, f|d)
+        probs = (xt @ router.astype(dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(probs, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32), axis=0)
+        aux = e * jnp.sum(me * ce)
+        for ax in data_axes:
+            aux = jax.lax.pmean(aux, ax)
+
+        j = jax.lax.axis_index("model")
+        lo = j * e_loc
+        flat_e = expert_ids.reshape(-1)
+        tok = jnp.repeat(jnp.arange(t_loc), k)
+        gates = gate_vals.reshape(-1)
+        mine = (flat_e >= lo) & (flat_e < lo + e_loc)
+        local_e = jnp.where(mine, flat_e - lo, e_loc)      # e_loc = drop bucket
+        order = jnp.argsort(local_e, stable=True)
+        se, stok, sg = local_e[order], tok[order], gates[order]
+        gstart = jnp.searchsorted(se, jnp.arange(e_loc + 1), side="left")
+        pos = jnp.arange(t_loc * k) - gstart[jnp.minimum(se, e_loc)]
+        keep = (se < e_loc) & (pos < cap)
+        dest = jnp.where(keep, se * cap + pos, e_loc * cap)  # trash slot at end
+
+        buf = jnp.zeros((e_loc * cap + 1, d), dtype=dtype)
+        vals = xt[stok] * keep[:, None].astype(dtype)
+        buf = buf.at[dest].add(vals)
+        buf = buf[: e_loc * cap].reshape(e_loc, cap, d)
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, w_up.astype(dtype))
+        eo = jnp.einsum("ecf,efd->ecd", h, w_down.astype(dtype))
+        eo = jnp.concatenate([eo.reshape(e_loc * cap, d),
+                              jnp.zeros((1, d), dtype)], axis=0)
+        slot_out = eo[dest] * (sg * keep.astype(jnp.float32)).astype(dtype)[:, None]
+        out = jnp.zeros((t_loc, d), dtype=dtype).at[stok].add(slot_out)
+        out = jax.lax.psum(out, "model")
+        return out, aux
+
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(data_spec, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(data_spec, None), P()),
+        check_vma=False,
+    )
+    out, aux = fn(x.reshape(t, d), p["router"],
+                  p["routed"]["w_gate"], p["routed"]["w_up"],
+                  p["routed"]["w_down"])
+    if "shared" in p:
+        out = out + layers.apply_mlp(p["shared"], x.reshape(t, d), cfg.mlp_kind, dtype)
+    return out.reshape(b, s, d), aux
+
+
+def apply_moe_dense_ref(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Oracle: run every expert densely and combine by routing weights.
+    O(E) compute -- tests only."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = (xt @ p["router"].astype(dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, cfg.n_experts_per_token)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    weights = jnp.zeros_like(probs)
+    weights = jnp.put_along_axis(weights, expert_ids, gate_vals, axis=-1, inplace=False)
+
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["routed"]["w_gate"].astype(dtype)))
+    h = h * jnp.einsum("td,edf->tef", xt, p["routed"]["w_up"].astype(dtype))
+    y = jnp.einsum("tef,efd->ted", h, p["routed"]["w_down"].astype(dtype))
+    out = jnp.einsum("ted,te->td", y, weights.astype(dtype))
+    if "shared" in p:
+        out = out + layers.apply_mlp(p["shared"], xt, cfg.mlp_kind, dtype)
+    return out.reshape(b, s, d)

@@ -1,0 +1,110 @@
+"""Model construction + dry-run input specifications.
+
+``build_model(cfg)`` returns the family-appropriate model object (all expose
+init / loss / prefill / decode_step / init_cache).
+
+``input_specs(cfg, shape_name)`` returns ShapeDtypeStruct stand-ins for every
+input of the step function that the (arch x shape) dry-run cell lowers --
+weak-type-correct, shardable, no device allocation.  Modality frontends are
+stubs: [vlm] cells get precomputed patch embeddings, [audio] cells get
+precomputed frame embeddings, per the build brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.encdec import Seq2SeqLM
+from repro.models.transformer import CausalLM
+from repro.models.xlstm import XLSTMLM
+
+# (seq_len, global_batch, kind)
+SHAPES: dict[str, tuple[int, int, str]] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+N_VISION_PATCHES = 256  # stub ViT output length prepended to [vlm] sequences
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return Seq2SeqLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg)
+    return CausalLM(cfg)
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """Eligibility for long_500k: SSM / hybrid / sliding-window-dominant."""
+    return cfg.family in ("ssm", "hybrid") or cfg.attn_pattern in ("sliding", "local_global")
+
+
+def supports(cfg: ModelConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return is_subquadratic(cfg)
+    return True
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
+    """Specs for the step function of this cell.
+
+    train  -> {"batch": {tokens, labels, ...}}
+    prefill-> {"batch": {tokens, ...}}
+    decode -> {"cache": <full-cache spec>, "tokens", ...}
+    """
+    seq, batch, kind = SHAPES[shape_name]
+    model = build_model(cfg)
+
+    if kind == "train":
+        b = {"tokens": _tok(batch, seq), "labels": _tok(batch, seq)}
+        if cfg.mrope_sections:
+            b["positions"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+        if cfg.frontend == "vision":
+            b["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (batch, N_VISION_PATCHES, cfg.d_model), cfg.compute_dtype
+            )
+        if cfg.frontend == "audio":
+            b["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (batch, seq, cfg.d_model), cfg.compute_dtype
+            )
+        return {"batch": b}
+
+    if kind == "prefill":
+        b = {"tokens": _tok(batch, seq)}
+        if cfg.mrope_sections:
+            b["positions"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+        if cfg.frontend == "vision":
+            b["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (batch, N_VISION_PATCHES, cfg.d_model), cfg.compute_dtype
+            )
+        if cfg.frontend == "audio":
+            b["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (batch, seq, cfg.d_model), cfg.compute_dtype
+            )
+        return {"batch": b}
+
+    # decode: one new token against a KV cache of length `seq`
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(lambda: model.init_cache(batch, seq, seq))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    spec = {"cache": cache, "tokens": _tok(batch, 1)}
+    if cfg.mrope_sections:
+        spec["positions"] = jax.ShapeDtypeStruct((3, batch, 1), jnp.int32)
+    return spec
+
+
+def param_specs(cfg: ModelConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))

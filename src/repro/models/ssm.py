@@ -1,0 +1,344 @@
+"""Recurrent sequence-mixing layers: selective SSM (Mamba-style, used by the
+Hymba hybrid heads) and the xLSTM cells (mLSTM matrix memory; sLSTM scalar
+memory with exponential gating), each with a parallel training form and an
+O(1)-state decode step.
+
+Training forms:
+  * selective SSM  -- associative scan over the diagonal recurrence
+                      h_t = a_t * h_{t-1} + b_t  (a_t = exp(dt*A)).
+  * mLSTM          -- quadratic "attention-like" form with log-gate cumsums
+                      and running-max stabilization (xLSTM paper eq. 19-27);
+                      this is the pure-jnp oracle of the chunked Pallas kernel.
+  * sLSTM          -- inherently sequential lax.scan (used 1-in-N blocks).
+
+Decode steps carry (conv_state, ssm_state) / (C, n, m) / (c, n, h, m).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (Mamba front conv).
+# ---------------------------------------------------------------------------
+
+def causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                          state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """x (B,S,D), w (K,D) -> (y (B,S,D), new_state (B,K-1,D)).
+
+    ``state`` holds the trailing K-1 inputs of the previous segment (decode)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k))
+    return y, xp[:, -(k - 1) :, :]
+
+
+# ---------------------------------------------------------------------------
+# Selective SSM (Mamba-style) head block.
+# ---------------------------------------------------------------------------
+
+def init_ssm(key, cfg: ModelConfig, d_inner: int) -> Params:
+    d, n = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": layers.dense_init(ks[0], d, d_inner),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, d_inner), jnp.float32) * 0.2,
+        "w_bc": layers.dense_init(ks[2], d_inner, 2 * n),
+        "w_dt": layers.dense_init(ks[3], d_inner, d_inner, scale=0.01),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            ks[4], (d_inner,), minval=math.log(1e-3), maxval=math.log(1e-1))))),
+        "a_log": jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))[None, :]
+        * jnp.ones((d_inner, 1), jnp.float32),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "w_out": layers.dense_init(ks[5], d_inner, d_inner),
+    }
+
+
+def _ssm_scan(a: jax.Array, bx: jax.Array, h0: jax.Array | None = None):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + bx_t along axis 1.
+    a, bx: (B, S, D, N).  Associative scan (parallel-prefix, O(log S) depth)."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def apply_ssm(p: Params, x: jax.Array, cfg: ModelConfig,
+              conv_state: jax.Array | None = None,
+              ssm_state: jax.Array | None = None):
+    """x (B,S,d_model-projected? no: d_model) -> (y (B,S,d_inner), states).
+
+    Training: conv_state/ssm_state None -> zero init, returns final states.
+    Decode:   pass both states (S may be 1)."""
+    dtype = x.dtype
+    n = cfg.ssm_state
+    xz = x @ p["w_in"].astype(dtype)                       # (B,S,Di)
+    xc, conv_state_new = causal_depthwise_conv(xz, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    bc = xc @ p["w_bc"].astype(dtype)                      # (B,S,2N)
+    b_in, c_out = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(xc @ p["w_dt"].astype(dtype) + p["dt_bias"].astype(dtype))
+    a = -jnp.exp(p["a_log"]).astype(jnp.float32)           # (Di,N), negative
+    # discretize: a_bar = exp(dt*A); b_bar x = dt * B * x
+    a_bar = jnp.exp(dt.astype(jnp.float32)[..., None] * a)            # (B,S,Di,N)
+    bx = (dt * xc).astype(jnp.float32)[..., None] * b_in.astype(jnp.float32)[..., None, :]
+    h = _ssm_scan(a_bar, bx, ssm_state)                    # (B,S,Di,N)
+    y = jnp.einsum("bsdn,bsn->bsd", h.astype(dtype), c_out)
+    y = y + xc * p["d_skip"].astype(dtype)
+    y = y * jax.nn.silu(xz)                                # gated output
+    y = y @ p["w_out"].astype(dtype)
+    return y, conv_state_new, h[:, -1].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell).
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, d_inner: int) -> Params:
+    h = cfg.n_heads
+    dh = d_inner // h
+    ks = jax.random.split(key, 6)
+    return {
+        # block-diagonal per-head qkv (the official xLSTM layout): (H, Dh, 3Dh)
+        # -- a dense (d_inner, 3 d_inner) matrix would be h x larger and is
+        # not what the 1.3B config's parameter budget implies
+        "w_qkv": jax.random.normal(ks[0], (h, dh, 3 * dh), jnp.float32)
+        / jnp.sqrt(dh),
+        "w_if": layers.dense_init(ks[1], d_inner, 2 * h, scale=0.01),
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((h,), jnp.float32), 3.0 * jnp.ones((h,), jnp.float32)]
+        ),
+        "o_norm": jnp.zeros((dh,), jnp.float32),
+    }
+
+
+def mlstm_parallel(q, k, v, i_gate, f_gate):
+    """Stabilized parallel mLSTM (the pure-jnp oracle for the Pallas kernel).
+
+    q,k,v: (B,H,S,Dh); i_gate,f_gate: (B,H,S) pre-activations.
+    Returns (B,H,S,Dh).
+
+    log f cumulative sums give the decay matrix
+        D_ij = exp(F_i - F_j + i_j - m_i),  F_t = sum_{u<=t} log sig(f_u),
+    masked to j <= i; m_i is the row max for stability; the output is
+        y = (S ⊙ D) V / max(|row-sum|, exp(-m_i)) with S = QK^T/sqrt(d).
+    """
+    b, h, s, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))          # (B,H,S)
+    fcum = jnp.cumsum(logf, axis=-1)
+    dmat = fcum[..., :, None] - fcum[..., None, :] + i_gate.astype(jnp.float32)[..., None, :]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(mask, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1, keepdims=True)                      # (B,H,S,1)
+    m = jnp.maximum(m, -1e30)                                      # guard all -inf
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) / math.sqrt(dh)
+    w = scores * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=-1, keepdims=True)), jnp.exp(-m))
+    return (jnp.einsum("bhst,bhtd->bhsd", (w / norm).astype(v.dtype), v),
+            fcum, m[..., 0])
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, state=None, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: O(S/L) sequential steps, O(L^2) intra-chunk
+    parallel work, exact (up to fp) match with the fully-parallel form.
+
+    q,k,v (B,H,S,Dh); gates (B,H,S).  Returns (y, (C,n,m) final state).
+    This is the algorithm the Pallas kernel implements; the jnp version here
+    doubles as its oracle at chunk granularity.
+    """
+    b, h, s, dh = q.shape
+    if state is None:
+        state = (
+            jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32),
+        )
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    resh = lambda x: x.reshape(b, h, n_chunks, chunk, *x.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+    # chunk-major: (n_chunks, B, H, L, ...)
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    is_, fs = resh(i_gate), resh(f_gate)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, xs):
+        C, n, m = carry                                     # (B,H,Dh,Dh),(B,H,Dh),(B,H)
+        qc, kc, vc, ic, fc = xs                             # (B,H,L,...)
+        logf = jax.nn.log_sigmoid(fc.astype(jnp.float32))   # (B,H,L)
+        bcum = jnp.cumsum(logf, axis=-1)                    # b_t
+        icast = ic.astype(jnp.float32)
+        # stabilizer per token: max(inter, intra)
+        intra_arg = bcum[..., :, None] - bcum[..., None, :] + icast[..., None, :]
+        intra_arg = jnp.where(tri, intra_arg, -jnp.inf)
+        m_intra = jnp.max(intra_arg, axis=-1)               # (B,H,L)
+        m_inter = bcum + m[..., None]
+        m_t = jnp.maximum(jnp.maximum(m_inter, m_intra), -1e30)
+        # inter-chunk contribution
+        qf = qc.astype(jnp.float32) / math.sqrt(dh)
+        g_inter = jnp.exp(m_inter - m_t)                    # (B,H,L)
+        y_inter = jnp.einsum("bhld,bhde->bhle", qf, C) * g_inter[..., None]
+        n_inter = jnp.einsum("bhld,bhd->bhl", qf, n) * g_inter
+        # intra-chunk contribution
+        dexp = jnp.exp(intra_arg - m_t[..., None])          # (B,H,L,L)
+        scores = jnp.einsum("bhld,bhtd->bhlt", qf, kc.astype(jnp.float32))
+        w = scores * dexp
+        y_intra = jnp.einsum("bhlt,bhtd->bhld", w, vc.astype(jnp.float32))
+        n_intra = jnp.sum(w, axis=-1)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))[..., None]
+        y = ((y_inter + y_intra) / denom).astype(vc.dtype)
+        # state update to end of chunk
+        b_last = bcum[..., -1]
+        m_new = jnp.maximum(b_last + m, jnp.max(b_last[..., None] - bcum + icast, axis=-1))
+        scale_old = jnp.exp(b_last + m - m_new)[..., None, None]
+        kv_w = jnp.exp(b_last[..., None] - bcum + icast - m_new[..., None])  # (B,H,L)
+        C_new = scale_old * C + jnp.einsum(
+            "bhl,bhld,bhle->bhde", kv_w, kc.astype(jnp.float32), vc.astype(jnp.float32)
+        )
+        n_new = scale_old[..., 0] * n + jnp.einsum("bhl,bhld->bhd", kv_w, kc.astype(jnp.float32))
+        return (C_new, n_new, m_new), y
+
+    state, ys = jax.lax.scan(step, state, (qs, ks, vs, is_, fs))
+    y = ys.swapaxes(1, 2).swapaxes(0, 2).reshape(b, h, s, dh)
+    return y, state
+
+
+def mlstm_step(q, k, v, i_gate, f_gate, C, n, m):
+    """One recurrent mLSTM step.  q,k,v (B,H,Dh); gates (B,H);
+    C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)."""
+    dh = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    m_new = jnp.maximum(logf + m, i_gate.astype(jnp.float32))
+    f_sc = jnp.exp(logf + m - m_new)[..., None, None]
+    i_sc = jnp.exp(i_gate.astype(jnp.float32) - m_new)[..., None, None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = f_sc * C + i_sc * (kf[..., :, None] * vf[..., None, :])
+    n_new = f_sc[..., 0] * n + i_sc[..., 0] * kf
+    qf = q.astype(jnp.float32) / math.sqrt(dh)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.sum(n_new * qf, axis=-1, keepdims=True)),
+                      jnp.exp(-m_new)[..., None])
+    return (num / den).astype(v.dtype), C_new, n_new, m_new
+
+
+def apply_mlstm(p: Params, x: jax.Array, cfg: ModelConfig, d_inner: int,
+                state: tuple | None = None):
+    """x (B,S,Di) -> (y (B,S,Di), new_state).  state = (C, n, m)."""
+    dtype = x.dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dh = d_inner // h
+    xh = x.reshape(b, s, h, dh)
+    qkv = jnp.einsum("bshd,hde->bshe", xh, p["w_qkv"].astype(dtype))
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3) / math.sqrt(dh)
+    v = v.transpose(0, 2, 1, 3)
+    gates = x @ p["w_if"].astype(dtype) + p["if_bias"].astype(dtype)
+    i_gate = gates[..., :h].transpose(0, 2, 1)             # (B,H,S)
+    f_gate = gates[..., h:].transpose(0, 2, 1)
+
+    if s > 1:
+        chunk = min(256, s)
+        y, new_state = mlstm_chunkwise(q, k, v, i_gate, f_gate, state,
+                                       chunk=chunk if s % chunk == 0 else s)
+    else:
+        C, n, m = state if state is not None else (
+            jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32),
+        )
+
+        def step(carry, inputs):
+            C, n, m = carry
+            qt, kt, vt, it, ft = inputs
+            y, C, n, m = mlstm_step(qt, kt, vt, it, ft, C, n, m)
+            return (C, n, m), y
+
+        xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+              v.transpose(2, 0, 1, 3), i_gate.transpose(2, 0, 1),
+              f_gate.transpose(2, 0, 1))
+        (C, n, m), ys = jax.lax.scan(step, (C, n, m), xs)
+        y = ys.transpose(1, 2, 0, 3)                       # (B,H,S,Dh)
+        new_state = (C, n, m)
+
+    y = layers.rms_norm(y, p["o_norm"])
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory cell) -- sequential scan.
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, d_inner: int) -> Params:
+    h = cfg.n_heads
+    dh = d_inner // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_zifo": layers.dense_init(ks[0], d_inner, 4 * d_inner),
+        "r_zifo": jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32) / math.sqrt(dh),
+        "b_zifo": jnp.zeros((4 * d_inner,), jnp.float32),
+        "o_norm": jnp.zeros((dh,), jnp.float32),
+    }
+
+
+def slstm_step(p: Params, xt: jax.Array, state, cfg: ModelConfig, d_inner: int):
+    """xt (B, 4*Di) preactivation from the input projection; state (c,n,h,m)
+    each (B,H,Dh).  Head-blocked recurrent weights (block-diagonal R)."""
+    c, n, hid, m = state
+    b = xt.shape[0]
+    nh = cfg.n_heads
+    dh = d_inner // nh
+    rec = jnp.einsum("bhd,hde->bhe", hid, p["r_zifo"].astype(hid.dtype))  # (B,H,4Dh)
+    pre = xt.reshape(b, nh, 4 * dh) + rec + p["b_zifo"].reshape(nh, 4 * dh).astype(xt.dtype)
+    z, i_raw, f_raw, o = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_sc = jnp.exp(i_raw - m_new)
+    f_sc = jnp.exp(logf + m - m_new)
+    c_new = f_sc * c + i_sc * z
+    n_new = f_sc * n + i_sc
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new.astype(xt.dtype), m_new)
+
+
+def apply_slstm(p: Params, x: jax.Array, cfg: ModelConfig, d_inner: int,
+                state=None):
+    """x (B,S,Di) -> (y (B,S,Di), state).  Sequential over S by construction."""
+    dtype = x.dtype
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    dh = d_inner // nh
+    if state is None:
+        zeros = jnp.zeros((b, nh, dh), jnp.float32)
+        state = (zeros, zeros, zeros.astype(dtype), jnp.full((b, nh, dh), -1e30, jnp.float32))
+    xin = x @ p["w_zifo"].astype(dtype)                    # (B,S,4Di)
+
+    def step(carry, xt):
+        new = slstm_step(p, xt, carry, cfg, d_inner)
+        return new, new[2]
+
+    state, hs = jax.lax.scan(step, state, xin.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3)                           # (B,S,H,Dh)
+    y = layers.rms_norm(y, p["o_norm"]).reshape(b, s, nh * dh)
+    return y, state

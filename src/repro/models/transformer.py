@@ -1,0 +1,483 @@
+"""Decoder-only transformer covering the dense, MoE, MLA-MoE and hybrid
+(attention ∥ SSM) families.
+
+Layer stacks run under ``jax.lax.scan`` with stacked parameters, so the
+lowered HLO contains ONE block body regardless of depth -- essential for fast
+SPMD compiles at 512 devices and for real TPU compile times.  Heterogeneous
+patterns are expressed without breaking scan homogeneity:
+
+  * local/global attention (gemma3, hymba): a traced per-layer ``is_global``
+    flag toggles the sliding-window mask term inside one scan;
+  * alternating dense/MoE (llama4): the scan iterates over (dense, MoE)
+    super-blocks with both parameter sets stacked;
+  * leading dense layers (deepseek-v2): applied outside the main MoE scan.
+
+The same ``_forward`` drives training (no cache), prefill (writes a cache)
+and decode (appends one token), selected by the inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import api as dist_api
+from repro.models import layers, mla, moe, ssm
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Single-layer init / apply.
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, use_moe: bool) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Params = {"ln1": jnp.zeros((d,), jnp.float32)}
+    if cfg.family == "mla_moe":
+        p["attn"] = mla.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = layers.init_attention(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        )
+    if cfg.family == "hybrid":
+        d_inner = cfg.n_heads * cfg.head_dim
+        p["ssm"] = ssm.init_ssm(ks[1], cfg, d_inner)
+        p["attn_out_norm"] = jnp.zeros((d_inner,), jnp.float32)
+        p["ssm_out_norm"] = jnp.zeros((d_inner,), jnp.float32)
+        p["w_mix_out"] = layers.dense_init(ks[4], d_inner, d)
+    if cfg.d_ff > 0 or use_moe:
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        if use_moe:
+            p["ffn"] = moe.init_moe(ks[2], cfg)
+        else:
+            p["ffn"] = layers.init_mlp(ks[2], d, cfg.d_ff, cfg.mlp_kind)
+    if cfg.post_norm:
+        p["ln_post_attn"] = jnp.zeros((d,), jnp.float32)
+        p["ln_post_ffn"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def _quantize_kv(x):
+    """(B,S,H,D) -> (int8 values, per-(token,head) f32 scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _attend(p, cfg: ModelConfig, h, positions, is_global, cache_k, cache_v, cache_len,
+            chunk_size, cache_extra=None):
+    """GQA attention with optional KV cache append.  Returns (out, k, v) or,
+    with an int8 cache, (out, (k_q, k_scale), (v_q, v_scale))."""
+    dtype = h.dtype
+    b, s, _ = h.shape
+    q, k, v = layers.project_qkv(p, h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dtype)
+    if cfg.mrope_sections:
+        q = layers.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = layers.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        q_offset = 0  # M-RoPE prefill/train only uses full-sequence positions
+    else:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+        q_offset = 0
+
+    window = cfg.sliding_window if cfg.attn_pattern != "full" else 0
+    window_active = None
+    if window > 0:
+        if cfg.attn_pattern == "sliding":
+            window_active = jnp.bool_(True) if is_global is None else jnp.logical_not(is_global)
+        else:  # local_global: traced flag from the scan
+            window_active = jnp.logical_not(is_global)
+
+    if cache_k is not None:
+        if cfg.kv_cache_dtype == "int8":
+            # int8 KV with per-(token, head) scales: halves the decode memory
+            # term vs bf16 (EXPERIMENTS.md §Perf, decode hillclimb)
+            k_q, k_s = _quantize_kv(k)
+            v_q, v_s = _quantize_kv(v)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache_k, k_q, cache_len, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache_v, v_q, cache_len, axis=1)
+            ks_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache_extra["k_scale"], k_s, cache_len, axis=1)
+            vs_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache_extra["v_scale"], v_s, cache_len, axis=1)
+            k_all = _dequantize_kv(k_cache, ks_cache, dtype)
+            v_all = _dequantize_kv(v_cache, vs_cache, dtype)
+            out = layers.chunked_attention(
+                q, k_all, v_all, causal=True, window=window, q_offset=cache_len,
+                kv_valid_len=cache_len + s, window_active=window_active,
+                logit_softcap=cfg.logit_softcap, chunk_size=chunk_size,
+            )
+            return out, (k_cache, ks_cache), (v_cache, vs_cache)
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_len, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_len, axis=1)
+        out = layers.chunked_attention(
+            q, k_all, v_all, causal=True, window=window, q_offset=cache_len,
+            kv_valid_len=cache_len + s, window_active=window_active,
+            logit_softcap=cfg.logit_softcap, chunk_size=chunk_size,
+        )
+        return out, k_all, v_all
+    out = layers.chunked_attention(
+        q, k, v, causal=True, window=window, window_active=window_active,
+        logit_softcap=cfg.logit_softcap, chunk_size=chunk_size,
+    )
+    return out, None, None
+
+
+def apply_layer(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    use_moe: bool,
+    is_global: jax.Array | None = None,
+    cache: dict | None = None,       # per-layer slices
+    cache_len: jax.Array | None = None,
+    chunk_size: int = 1024,
+) -> tuple[jax.Array, dict, jax.Array]:
+    """One block.  Returns (x, new_cache_slices, moe_aux_loss)."""
+    dtype = x.dtype
+    new_cache: dict = {}
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+
+    if cfg.family == "mla_moe":
+        attn_out, new_ckv, new_krope = mla.apply_mla(
+            p["attn"], h, cfg, positions,
+            cache_ckv=None if cache is None else cache["ckv"],
+            cache_krope=None if cache is None else cache["krope"],
+            cache_len=cache_len, chunk_size=chunk_size,
+        )
+        if cache is not None:
+            new_cache.update(ckv=new_ckv, krope=new_krope)
+    elif cfg.family == "hybrid":
+        a_out, k_all, v_all = _attend(
+            p["attn"], cfg, h, positions, is_global,
+            None if cache is None else cache["k"],
+            None if cache is None else cache["v"], cache_len, chunk_size,
+        )
+        d_inner = cfg.n_heads * cfg.head_dim
+        a_out = a_out.reshape(*h.shape[:2], d_inner)
+        s_out, conv_st, ssm_st = ssm.apply_ssm(
+            p["ssm"], h, cfg,
+            None if cache is None else cache["conv"],
+            None if cache is None else cache["ssm"],
+        )
+        mixed = 0.5 * (
+            layers.rms_norm(a_out, p["attn_out_norm"], cfg.norm_eps)
+            + layers.rms_norm(s_out, p["ssm_out_norm"], cfg.norm_eps)
+        )
+        attn_out = mixed @ p["w_mix_out"].astype(dtype)
+        if cache is not None:
+            new_cache.update(k=k_all, v=v_all, conv=conv_st, ssm=ssm_st)
+    else:
+        extra = None
+        if cache is not None and cfg.kv_cache_dtype == "int8":
+            extra = {"k_scale": cache["k_scale"], "v_scale": cache["v_scale"]}
+        raw, k_all, v_all = _attend(
+            p["attn"], cfg, h, positions, is_global,
+            None if cache is None else cache["k"],
+            None if cache is None else cache["v"], cache_len, chunk_size,
+            cache_extra=extra,
+        )
+        b, s = h.shape[:2]
+        attn_out = raw.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"].astype(dtype)
+        if cache is not None:
+            if cfg.kv_cache_dtype == "int8":
+                new_cache.update(k=k_all[0], k_scale=k_all[1],
+                                 v=v_all[0], v_scale=v_all[1])
+            else:
+                new_cache.update(k=k_all, v=v_all)
+
+    if cfg.post_norm:
+        attn_out = layers.rms_norm(attn_out, p["ln_post_attn"], cfg.norm_eps)
+
+    if "ffn" not in p:
+        return x + attn_out, new_cache, aux
+
+    if cfg.parallel_block:
+        ffn_in = h
+        x_mid = x
+    else:
+        x_mid = x + attn_out
+        ffn_in = layers.rms_norm(x_mid, p["ln2"], cfg.norm_eps)
+
+    if use_moe:
+        ffn_out, aux = moe.apply_moe(p["ffn"], ffn_in, cfg)
+    else:
+        ffn_out = layers.apply_mlp(p["ffn"], ffn_in, cfg.mlp_kind, dtype)
+    if cfg.post_norm:
+        ffn_out = layers.rms_norm(ffn_out, p["ln_post_ffn"], cfg.norm_eps)
+
+    if cfg.parallel_block:
+        return x + attn_out + ffn_out, new_cache, aux
+    return x_mid + ffn_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# The full model.
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, n: int, fn) -> Params:
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+@dataclasses.dataclass(frozen=True)
+class CausalLM:
+    cfg: ModelConfig
+
+    # ---------------- init ----------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_embed, k_layers, k_head = jax.random.split(key, 3)
+        p: Params = {
+            "embed": layers.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+            "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = layers.dense_init(k_head, cfg.d_model, cfg.vocab_size)
+        if cfg.n_experts and cfg.moe_every == 2:
+            ka, kb = jax.random.split(k_layers)
+            n_pairs = cfg.n_layers // 2
+            p["pairs"] = {
+                "dense": _stacked_init(ka, n_pairs, lambda k: init_layer(k, cfg, False)),
+                "moe": _stacked_init(kb, n_pairs, lambda k: init_layer(k, cfg, True)),
+            }
+        elif cfg.n_experts:
+            ka, kb = jax.random.split(k_layers)
+            if cfg.n_dense_leading:
+                p["lead"] = _stacked_init(
+                    ka, cfg.n_dense_leading, lambda k: init_layer(k, cfg, False)
+                )
+            p["blocks"] = _stacked_init(
+                kb, cfg.n_layers - cfg.n_dense_leading,
+                lambda k: init_layer(k, cfg, True),
+            )
+        else:
+            p["blocks"] = _stacked_init(
+                k_layers, cfg.n_layers, lambda k: init_layer(k, cfg, False)
+            )
+        return p
+
+    # ---------------- caches ----------------
+    def init_cache(self, batch_size: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        l = cfg.n_layers
+        cache: dict = {"len": jnp.zeros((), jnp.int32)}
+        if cfg.family == "mla_moe":
+            cache["ckv"] = jnp.zeros((l, batch_size, max_len, cfg.kv_lora_rank), dt)
+            cache["krope"] = jnp.zeros((l, batch_size, max_len, cfg.rope_head_dim), dt)
+        elif cfg.kv_cache_dtype == "int8" and cfg.family != "hybrid":
+            kv_shape = (l, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+            cache["k"] = jnp.zeros(kv_shape, jnp.int8)
+            cache["v"] = jnp.zeros(kv_shape, jnp.int8)
+            cache["k_scale"] = jnp.zeros(kv_shape[:-1], jnp.float32)
+            cache["v_scale"] = jnp.zeros(kv_shape[:-1], jnp.float32)
+        else:
+            cache["k"] = jnp.zeros(
+                (l, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim), dt
+            )
+            cache["v"] = jnp.zeros_like(cache["k"])
+        if cfg.family == "hybrid":
+            d_inner = cfg.n_heads * cfg.head_dim
+            cache["conv"] = jnp.zeros((l, batch_size, cfg.ssm_conv - 1, d_inner), dt)
+            cache["ssm"] = jnp.zeros((l, batch_size, d_inner, cfg.ssm_state), jnp.float32)
+        return cache
+
+    # ---------------- forward ----------------
+    def _block_fn(self, use_moe: bool, has_cache: bool, chunk_size: int):
+        cfg = self.cfg
+
+        def fn(x, positions, p_l, is_global_l, cache_l, cache_len):
+            return apply_layer(
+                p_l, cfg, x, positions, use_moe=use_moe, is_global=is_global_l,
+                cache=cache_l if has_cache else None, cache_len=cache_len,
+                chunk_size=chunk_size,
+            )
+
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        return fn
+
+    def _scan_stack(self, params_stack, x, positions, is_global, cache, cache_len,
+                    use_moe: bool, chunk_size: int):
+        """Scan one homogeneous group of layers.  cache: dict of (L,...) or None."""
+        has_cache = cache is not None
+        block = self._block_fn(use_moe, has_cache, chunk_size)
+
+        if not has_cache:
+            def body_nc(carry, xs_l):
+                x, aux = carry
+                p_l, glob_l = xs_l
+                x, _, aux_l = block(x, positions, p_l, glob_l, None, cache_len)
+                return (x, aux + aux_l), None
+
+            (x, aux), _ = jax.lax.scan(body_nc, (x, jnp.zeros((), jnp.float32)),
+                                       (params_stack, is_global))
+            return x, None, aux
+
+        def body(carry, xs_l):
+            x, aux = carry
+            p_l, glob_l, cache_l = xs_l
+            x, new_cache_l, aux_l = block(x, positions, p_l, glob_l, cache_l, cache_len)
+            return (x, aux + aux_l), new_cache_l
+
+        (x, aux), new_cache = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params_stack, is_global, cache)
+        )
+        return x, new_cache, aux
+
+    def forward(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        positions: jax.Array | None = None,
+        cache: dict | None = None,
+        embeds_override: jax.Array | None = None,
+        logits_mode: str = "all",
+        chunk_size: int = 1024,
+    ):
+        """Returns (logits, new_cache, moe_aux)."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        b, s = tokens.shape
+        x = params["embed"][tokens].astype(dt)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
+        if embeds_override is not None:
+            # modality stub: precomputed frontend embeddings overwrite the
+            # leading positions (vision patches / audio frames)
+            n_pre = embeds_override.shape[1]
+            x = jnp.concatenate([embeds_override.astype(dt), x[:, n_pre:]], axis=1)
+
+        cache_len = None if cache is None else cache["len"]
+        if positions is None:
+            start = 0 if cache is None else cache_len
+            positions = jnp.arange(s)[None, :] + (start if cache is not None else 0)
+            positions = jnp.broadcast_to(positions, (b, s))
+
+        glob_flags = jnp.array(
+            [cfg.is_global_layer(i) for i in range(cfg.n_layers)], dtype=bool
+        )
+        new_cache = None if cache is None else dict(cache)
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def cache_slice(sl):
+            if cache is None:
+                return None
+            return {k: v[sl] for k, v in cache.items() if k != "len"}
+
+        if cfg.n_experts and cfg.moe_every == 2:
+            n_pairs = cfg.n_layers // 2
+            flags = glob_flags.reshape(n_pairs, 2)
+            c_pair = None
+            if cache is not None:
+                c_pair = {k: v.reshape(n_pairs, 2, *v.shape[1:])
+                          for k, v in cache.items() if k != "len"}
+            has_cache = cache is not None
+            block_d = self._block_fn(False, has_cache, chunk_size)
+            block_m = self._block_fn(True, has_cache, chunk_size)
+
+            if has_cache:
+                def body(carry, xs_l):
+                    x, aux = carry
+                    pd, pm, fl, cl = xs_l
+                    cd = {k: v[0] for k, v in cl.items()}
+                    cm = {k: v[1] for k, v in cl.items()}
+                    x, ncd, aux_d = block_d(x, positions, pd, fl[0], cd, cache_len)
+                    x, ncm, aux_m = block_m(x, positions, pm, fl[1], cm, cache_len)
+                    ys = {k: jnp.stack([ncd[k], ncm[k]]) for k in ncd}
+                    return (x, aux + aux_d + aux_m), ys
+
+                (x, aux_total), ys = jax.lax.scan(
+                    body, (x, aux_total),
+                    (params["pairs"]["dense"], params["pairs"]["moe"], flags, c_pair),
+                )
+                for k in ys:
+                    new_cache[k] = ys[k].reshape(cfg.n_layers, *ys[k].shape[2:])
+            else:
+                def body_nc(carry, xs_l):
+                    x, aux = carry
+                    pd, pm, fl = xs_l
+                    x, _, aux_d = block_d(x, positions, pd, fl[0], None, cache_len)
+                    x, _, aux_m = block_m(x, positions, pm, fl[1], None, cache_len)
+                    return (x, aux + aux_d + aux_m), None
+
+                (x, aux_total), _ = jax.lax.scan(
+                    body_nc, (x, aux_total),
+                    (params["pairs"]["dense"], params["pairs"]["moe"], flags),
+                )
+        else:
+            n_lead = cfg.n_dense_leading if cfg.n_experts else 0
+            if n_lead:
+                x, nc_lead, aux_l = self._scan_stack(
+                    params["lead"], x, positions, glob_flags[:n_lead],
+                    cache_slice(slice(0, n_lead)), cache_len, False, chunk_size,
+                )
+                aux_total += aux_l
+            x, nc_main, aux_m = self._scan_stack(
+                params["blocks"], x, positions, glob_flags[n_lead:],
+                cache_slice(slice(n_lead, cfg.n_layers)), cache_len,
+                bool(cfg.n_experts), chunk_size,
+            )
+            aux_total += aux_m
+            if cache is not None:
+                for k in nc_main:
+                    parts = [nc_lead[k], nc_main[k]] if n_lead else [nc_main[k]]
+                    new_cache[k] = jnp.concatenate(parts, axis=0)
+
+        x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if logits_mode == "last":
+            x = x[:, -1:]
+        x = dist_api.constrain(x, "batch", None, None)
+        table = params.get("unembed")
+        if table is None:
+            logits = x @ params["embed"].T.astype(dt)
+        else:
+            logits = x @ table.astype(dt)
+        # pin the canonical (batch@data, :, vocab@model) layout: without this
+        # GSPMD's transpose strategy all-gathers full-batch fp32 logits
+        logits = dist_api.constrain(logits, "batch", None, "vocab")
+        if cache is not None:
+            new_cache["len"] = cache_len + s
+        return logits, new_cache, aux_total
+
+    # ---------------- public entry points ----------------
+    def loss(self, params: Params, batch: dict) -> jax.Array:
+        logits, _, aux = self.forward(
+            params, batch["tokens"],
+            positions=batch.get("positions"),
+            embeds_override=batch.get("frontend_embeds"),
+        )
+        ce = layers.softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return ce + MOE_AUX_COEF * aux
+
+    def prefill(self, params: Params, batch: dict, max_len: int):
+        tokens = batch["tokens"]
+        cache = self.init_cache(tokens.shape[0], max_len)
+        logits, cache, _ = self.forward(
+            params, tokens, positions=batch.get("positions"), cache=cache,
+            embeds_override=batch.get("frontend_embeds"), logits_mode="last",
+        )
+        return logits, cache
+
+    def decode_step(self, params: Params, cache: dict, tokens: jax.Array,
+                    positions: jax.Array | None = None):
+        logits, cache, _ = self.forward(
+            params, tokens, positions=positions, cache=cache, logits_mode="last",
+        )
+        return logits, cache

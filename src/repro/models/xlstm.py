@@ -1,0 +1,228 @@
+"""xLSTM language model (arXiv:2405.04517): a stack of mLSTM blocks
+(matrix-memory, chunkwise-parallel) with one sLSTM block (scalar-memory,
+sequential) every ``slstm_every`` blocks -- the paper's a:b block ratio.
+
+Block wiring follows the paper:
+  * mLSTM block: pre-norm -> up-projection x2 (value + gate lanes) -> short
+    causal conv on the value lane -> mLSTM -> silu-gate -> down-projection.
+  * sLSTM block: pre-norm -> sLSTM (head-blocked recurrence) -> residual,
+    then a GeGLU FFN sub-block at projection factor 4/3.
+
+Blocks are grouped into super-blocks of (slstm_every-1) mLSTM + 1 sLSTM and
+scanned: outer scan over super-blocks, inner scan over the mLSTM run, so the
+HLO holds exactly one mLSTM body and one sLSTM body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import api as dist_api
+from repro.models import layers, ssm
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _ffn_dim(d: int) -> int:
+    return ((4 * d // 3) + 63) // 64 * 64
+
+
+def init_mlstm_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "w_up": layers.dense_init(ks[0], d, 2 * d_inner),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, d_inner), jnp.float32) * 0.2,
+        "cell": ssm.init_mlstm(ks[2], cfg, d_inner),
+        "w_down": layers.dense_init(ks[3], d_inner, d),
+    }
+
+
+def apply_mlstm_block(p: Params, cfg: ModelConfig, x, state=None):
+    """state = (conv_state, C, n, m) or None (training)."""
+    dtype = x.dtype
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["w_up"].astype(dtype)
+    a, g = up[..., :d_inner], up[..., d_inner:]
+    conv_state = None if state is None else state[0]
+    a, conv_state_new = ssm.causal_depthwise_conv(a, p["conv_w"], conv_state)
+    a = jax.nn.silu(a)
+    cell_state = None if state is None else state[1:]
+    y, cell_state_new = ssm.apply_mlstm(p["cell"], a, cfg, d_inner, cell_state)
+    y = y * jax.nn.silu(g)
+    out = x + y @ p["w_down"].astype(dtype)
+    if state is None:
+        return out, None
+    return out, (conv_state_new, *cell_state_new)
+
+
+def init_slstm_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "cell": ssm.init_slstm(ks[0], cfg, d),
+        "ln_ffn": jnp.zeros((d,), jnp.float32),
+        "ffn": layers.init_mlp(ks[1], d, _ffn_dim(d), "geglu"),
+    }
+
+
+def apply_slstm_block(p: Params, cfg: ModelConfig, x, state=None):
+    dtype = x.dtype
+    h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, state_new = ssm.apply_slstm(p["cell"], h, cfg, cfg.d_model, state)
+    x = x + y
+    h2 = layers.rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    x = x + layers.apply_mlp(p["ffn"], h2, "geglu", dtype)
+    return x, state_new
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMLM:
+    cfg: ModelConfig
+
+    @property
+    def _layout(self) -> tuple[int, int]:
+        """(n_super_blocks, mlstm_per_super)."""
+        cfg = self.cfg
+        if cfg.slstm_every <= 0:
+            return 1, cfg.n_layers
+        assert cfg.n_layers % cfg.slstm_every == 0
+        return cfg.n_layers // cfg.slstm_every, cfg.slstm_every - 1
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        n_super, n_m = self._layout
+        k_embed, k_m, k_s, k_head = jax.random.split(key, 4)
+        p: Params = {
+            "embed": layers.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+            "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        m_keys = jax.random.split(k_m, n_super * n_m).reshape(n_super, n_m)
+        p["m_blocks"] = jax.vmap(jax.vmap(lambda k: init_mlstm_block(k, cfg)))(m_keys)
+        if cfg.slstm_every > 0:
+            p["s_blocks"] = jax.vmap(lambda k: init_slstm_block(k, cfg))(
+                jax.random.split(k_s, n_super)
+            )
+        if not cfg.tie_embeddings:
+            p["unembed"] = layers.dense_init(k_head, cfg.d_model, cfg.vocab_size)
+        return p
+
+    def init_cache(self, batch_size: int, max_len: int) -> dict:
+        cfg = self.cfg
+        n_super, n_m = self._layout
+        d_inner = cfg.ssm_expand * cfg.d_model
+        h = cfg.n_heads
+        dh_m = d_inner // h
+        dh_s = cfg.d_model // h
+        dt = cfg.compute_dtype
+        cache = {
+            "len": jnp.zeros((), jnp.int32),
+            "m_conv": jnp.zeros((n_super, n_m, batch_size, cfg.ssm_conv - 1, d_inner), dt),
+            "m_C": jnp.zeros((n_super, n_m, batch_size, h, dh_m, dh_m), jnp.float32),
+            "m_n": jnp.zeros((n_super, n_m, batch_size, h, dh_m), jnp.float32),
+            "m_m": jnp.full((n_super, n_m, batch_size, h), -1e30, jnp.float32),
+        }
+        if cfg.slstm_every > 0:
+            z = jnp.zeros((n_super, batch_size, h, dh_s), jnp.float32)
+            cache.update(
+                s_c=z, s_n=z, s_h=z.astype(dt),
+                s_m=jnp.full((n_super, batch_size, h, dh_s), -1e30, jnp.float32),
+            )
+        return cache
+
+    def _stack_forward(self, params, x, cache):
+        cfg = self.cfg
+        n_super, n_m = self._layout
+        has_cache = cache is not None
+
+        def m_block(x, p_l, st):
+            return apply_mlstm_block(p_l, cfg, x, st)
+
+        def s_block(x, p_l, st):
+            return apply_slstm_block(p_l, cfg, x, st)
+
+        if cfg.remat:
+            m_block = jax.checkpoint(m_block)
+            s_block = jax.checkpoint(s_block)
+
+        def inner(x, m_params, m_cache):
+            def body(carry, xs_l):
+                if has_cache:
+                    p_l, (conv, C, n, m) = xs_l
+                    out, st = m_block(carry, p_l, (conv, C, n, m))
+                    return out, st
+                p_l = xs_l
+                out, _ = m_block(carry, p_l, None)
+                return out, None
+
+            xs = (m_params, m_cache) if has_cache else m_params
+            return jax.lax.scan(body, x, xs)
+
+        def outer_body(carry, xs_s):
+            x = carry
+            if has_cache:
+                mp, sp, mc, sc = xs_s
+                x, m_states = inner(x, mp, mc)
+                x, s_state = s_block(x, sp, sc)
+                return x, (m_states, s_state)
+            if cfg.slstm_every > 0:
+                mp, sp = xs_s
+                x, _ = inner(x, mp, None)
+                x, _ = s_block(x, sp, None)
+            else:
+                (mp,) = xs_s
+                x, _ = inner(x, mp, None)
+            return x, None
+
+        if has_cache:
+            m_cache = (cache["m_conv"], cache["m_C"], cache["m_n"], cache["m_m"])
+            s_cache = (cache["s_c"], cache["s_n"], cache["s_h"], cache["s_m"])
+            x, (m_states, s_state) = jax.lax.scan(
+                outer_body, x, (params["m_blocks"], params["s_blocks"], m_cache, s_cache)
+            )
+            new_cache = dict(cache)
+            new_cache.update(
+                m_conv=m_states[0], m_C=m_states[1], m_n=m_states[2], m_m=m_states[3],
+                s_c=s_state[0], s_n=s_state[1], s_h=s_state[2], s_m=s_state[3],
+            )
+            return x, new_cache
+        xs = (params["m_blocks"], params["s_blocks"]) if cfg.slstm_every > 0 else (params["m_blocks"],)
+        x, _ = jax.lax.scan(outer_body, x, xs)
+        return x, None
+
+    def forward(self, params, tokens, cache=None, logits_mode="all", **_):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        x = params["embed"][tokens].astype(dt)
+        x, new_cache = self._stack_forward(params, x, cache)
+        x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if logits_mode == "last":
+            x = x[:, -1:]
+        x = dist_api.constrain(x, "batch", None, None)
+        table = params.get("unembed")
+        logits = x @ (params["embed"].T.astype(dt) if table is None else table.astype(dt))
+        logits = dist_api.constrain(logits, "batch", None, "vocab")
+        if new_cache is not None:
+            new_cache["len"] = cache["len"] + tokens.shape[1]
+        return logits, new_cache, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _, _ = self.forward(params, batch["tokens"])
+        return layers.softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+    def prefill(self, params, batch, max_len: int):
+        cache = self.init_cache(batch["tokens"].shape[0], max_len)
+        logits, cache, _ = self.forward(params, batch["tokens"], cache, logits_mode="last")
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, positions=None):
+        logits, cache, _ = self.forward(params, tokens, cache, logits_mode="last")
+        return logits, cache

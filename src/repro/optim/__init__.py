@@ -1,0 +1,11 @@
+"""Pure-pytree optimizers (no optax in the image): AdamW, SGD+momentum,
+cosine/linear LR schedules, global-norm clipping."""
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    linear_warmup_cosine,
+    sgd,
+)

@@ -1,0 +1,128 @@
+"""Minimal pure-pytree optimizer library (the image has no optax).
+
+Each optimizer is an (init, update) pair closed over hyperparameters;
+``update(grads, state, params)`` returns (new_params, new_state).  All state
+lives in a flat NamedTuple-of-pytrees so it shards/checkpoints like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Pytree          # first moment / momentum
+    nu: Pytree | None   # second moment (None for SGD)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def lr(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1.0 - final_frac) * cos)
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+    def lr(step):
+        warm = base_lr * (step + 1) / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return lr
+
+
+def adamw(
+    lr: float | Callable = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: float = 0.0,
+    moment_dtype=jnp.float32,
+):
+    """moment_dtype=bfloat16 halves optimizer-state HBM (the update math still
+    runs in fp32; only the stored moments round) -- the memory-fit lever for
+    the 200B+ train cells (EXPERIMENTS.md §Perf)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params: Pytree) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=moment_dtype), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                        nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads: Pytree, state: OptState, params: Pytree):
+        if max_grad_norm > 0.0:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+            nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = mu_n / c1
+            vhat = nu_n / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                    mu_n.astype(moment_dtype), nu_n.astype(moment_dtype))
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step=step, mu=new_mu, nu=new_nu)
+
+    return init, update
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0,
+        max_grad_norm: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params: Pytree) -> OptState:
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params) \
+            if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+
+    def update(grads: Pytree, state: OptState, params: Pytree):
+        if max_grad_norm > 0.0:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            new_mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads
+            )
+            new_params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype),
+                params, new_mu,
+            )
+            return new_params, OptState(step=step, mu=new_mu, nu=None)
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        return new_params, OptState(step=step, mu=None, nu=None)
+
+    return init, update

@@ -1,0 +1,172 @@
+"""Tests for the fairness-adjusted multi-bid auction (paper §V)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import auction, disba, fairness, intra, network
+from repro.core.types import make_service_set
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    svc, meta = network.table1_service_set(jax.random.key(0))
+    return svc, network.B_TOTAL_MHZ
+
+
+# ---------------------------------------------------------------------------
+# Pseudo step functions.
+# ---------------------------------------------------------------------------
+
+def _hand_bid():
+    # one provider: prices [1, 2, 3], demands [6, 4, 1]
+    return auction.MultiBid(
+        prices=jnp.array([[1.0, 2.0, 3.0]]), demands=jnp.array([[6.0, 4.0, 1.0]])
+    )
+
+
+def test_pseudo_mbdf_step_semantics():
+    bid = _hand_bid()
+    # left-continuous: value at exactly a bid price is that bid's demand
+    assert float(auction.pseudo_mbdf(bid, jnp.float32(0.5), "left")[0]) == 6.0
+    assert float(auction.pseudo_mbdf(bid, jnp.float32(1.0), "left")[0]) == 6.0
+    assert float(auction.pseudo_mbdf(bid, jnp.float32(1.5), "left")[0]) == 4.0
+    assert float(auction.pseudo_mbdf(bid, jnp.float32(3.0), "left")[0]) == 1.0
+    assert float(auction.pseudo_mbdf(bid, jnp.float32(3.5), "left")[0]) == 0.0
+    # right limits jump at the bid price
+    assert float(auction.pseudo_mbdf(bid, jnp.float32(1.0), "right")[0]) == 4.0
+    assert float(auction.pseudo_mbdf(bid, jnp.float32(3.0), "right")[0]) == 0.0
+
+
+def test_pseudo_mmvf_integral_piecewise():
+    bid = _hand_bid()
+    # q(b) = 3 on (0,1], 2 on (1,4], 1 on (4,6], 0 above 6
+    val = float(auction.pseudo_mmvf_integral(bid, jnp.array([0.0]), jnp.array([6.0]))[0])
+    np.testing.assert_allclose(val, 3 * 1 + 2 * 3 + 1 * 2, rtol=1e-6)
+    val2 = float(auction.pseudo_mmvf_integral(bid, jnp.array([0.5]), jnp.array([4.5]))[0])
+    np.testing.assert_allclose(val2, 3 * 0.5 + 2 * 3 + 1 * 0.5, rtol=1e-6)
+
+
+def test_clearing_price_hand_example():
+    # two providers, supply 6
+    bid = auction.MultiBid(
+        prices=jnp.array([[1.0, 2.0], [1.5, 2.5]]),
+        demands=jnp.array([[5.0, 2.0], [4.0, 1.0]]),
+    )
+    # d_bar(p): p<=1 -> 9; (1,1.5] -> 6(=2+4); (1.5,2] -> 3(=2+1); (2,2.5] -> 1; >2.5 -> 0
+    # sup{p: d(p) > 6} = 1.0
+    zeta = float(auction.clearing_price(bid, 6.0))
+    assert zeta == 1.0
+    b, _ = auction.allocate(bid, 6.0)
+    # at zeta+: demands (2. ... wait (1,1.5] -> provider1: 2, provider2: 4 => 6
+    np.testing.assert_allclose(float(jnp.sum(b)), 6.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end auction properties.
+# ---------------------------------------------------------------------------
+
+def test_auction_allocates_full_supply(scenario):
+    svc, B = scenario
+    res = auction.run_auction(svc, B, n_bids=5, alpha_fair=0.5)
+    np.testing.assert_allclose(float(jnp.sum(res.b)), B, rtol=1e-5)
+    assert bool(jnp.all(res.b >= -1e-6))
+
+
+def test_individual_rationality(scenario):
+    """Prop. 4: truthful bidders never end with negative utility."""
+    svc, B = scenario
+    for a in (0.0, 0.3, 0.5, 0.8, 1.0):
+        res = auction.run_auction(svc, B, n_bids=5, alpha_fair=a)
+        assert bool(jnp.all(res.utilities >= -1e-4)), f"IR violated at alpha={a}"
+
+
+def test_auction_approaches_exact_mmcp_with_more_bids(scenario):
+    """Fig. 8: the M-bid approximation's welfare approaches the exact mMCP."""
+    svc, B = scenario
+    a = 0.5
+    exact = fairness.exact_mmcp(svc, B, a)
+    welfare_exact = float(jnp.sum(fairness.g_value(exact.f, a)))
+    gaps = []
+    for m in (2, 5, 20, 60):
+        res = auction.run_auction(svc, B, n_bids=m, alpha_fair=a)
+        gaps.append(welfare_exact - float(jnp.sum(fairness.g_value(res.f, a))))
+    assert gaps[-1] <= gaps[0] + 1e-5
+    assert gaps[-1] < 0.05 * abs(welfare_exact)
+
+
+def test_alpha_zero_maximizes_total_frequency(scenario):
+    """Prop. 2: at alpha=0 the clearing allocation maximizes sum_n f_n."""
+    svc, B = scenario
+    exact = fairness.exact_mmcp(svc, B, 0.0)
+    total = float(jnp.sum(exact.f))
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        w = rng.dirichlet(np.ones(svc.n_services)).astype(np.float32)
+        f_rand = intra.freq(svc, jnp.asarray(w * B))
+        assert total >= float(jnp.sum(f_rand)) - 1e-3
+
+
+def test_alpha_one_recovers_proportional_fairness(scenario):
+    """alpha=1: g = log(1+f), so the mMCP allocation equals cooperative DISBA."""
+    svc, B = scenario
+    exact = fairness.exact_mmcp(svc, B, 1.0)
+    coop = disba.solve_lambda_bisect(svc, B)
+    np.testing.assert_allclose(np.asarray(exact.b), np.asarray(coop.b), rtol=2e-2, atol=1e-2)
+
+
+def test_clearing_price_decreases_with_alpha(scenario):
+    """Fig. 9: a fairness-leaning market clears at a lower price."""
+    svc, B = scenario
+    prices = [float(fairness.exact_mmcp(svc, B, a).price) for a in (0.0, 0.25, 0.5, 0.75, 1.0)]
+    assert all(p1 >= p2 - 1e-6 for p1, p2 in zip(prices, prices[1:])), prices
+
+
+def test_delta_bound_shrinks_with_bid_granularity(scenario):
+    """Prop. 5 / §V.E: the truthfulness gap Delta_n decreases as the bid grid
+    refines (M up), and does so substantially (the pseudo functions approach
+    the true mBDF/mMVF)."""
+    svc, B = scenario
+    a = 0.5
+    deltas = [
+        auction.delta_bound(svc, auction.uniform_truthful_bids(svc, m, a), a)
+        for m in (4, 8, 32)
+    ]
+    assert bool(jnp.all(deltas[1] <= deltas[0] + 1e-5))
+    assert bool(jnp.all(deltas[2] <= deltas[1] + 1e-5))
+    # M=32 should cut the M=4 gap by ~>2x for every provider.
+    assert bool(jnp.all(deltas[2] <= 0.5 * deltas[0]))
+    assert bool(jnp.all(deltas[2] >= 0))
+
+
+def test_charges_nonnegative_and_cover_fairness_cost(scenario):
+    svc, B = scenario
+    a = 0.5
+    res = auction.run_auction(svc, B, n_bids=5, alpha_fair=a)
+    fair_c = fairness.fairness_cost(res.f, a)
+    assert bool(jnp.all(res.charges >= fair_c - 1e-6))  # social cost term >= 0
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), m=st.integers(2, 12))
+def test_property_supply_conservation(seed, m):
+    rng = np.random.default_rng(seed)
+    n, k = 6, 8
+    alpha = rng.uniform(0.01, 0.5, size=(n, k)).astype(np.float32)
+    t_comp = rng.uniform(0.005, 0.08, size=(n, k)).astype(np.float32)
+    svc = make_service_set(alpha, t_comp)
+    bid = auction.uniform_truthful_bids(svc, m, 0.5)
+    b, zeta = auction.allocate(bid, 10.0)
+    # prices ascend, demands descend
+    assert bool(jnp.all(jnp.diff(bid.prices, axis=1) > 0))
+    assert bool(jnp.all(jnp.diff(bid.demands, axis=1) <= 1e-5))
+    assert bool(jnp.all(b >= -1e-6))
+    total = float(jnp.sum(b))
+    # full allocation whenever demand at the reserve exceeds supply
+    demand_at_reserve = float(jnp.sum(bid.demands[:, 0]))
+    if demand_at_reserve > 10.0:
+        np.testing.assert_allclose(total, 10.0, rtol=1e-4)
+    else:
+        assert total <= 10.0 + 1e-4

@@ -1,0 +1,141 @@
+"""Unit + property tests for the intra-service allocator (paper Eqns. 1-10, 14)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import intra
+from repro.core.types import ServiceSet, make_service_set, round_time_given_alloc
+
+
+def _random_service(seed, n=4, k=9):
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(0.01, 0.2, size=(n, k)).astype(np.float32)
+    t_comp = rng.uniform(0.01, 0.06, size=(n, k)).astype(np.float32)
+    mask = np.ones((n, k), dtype=bool)
+    # ragged client counts
+    for i in range(n):
+        kk = rng.integers(2, k + 1)
+        mask[i, kk:] = False
+    return make_service_set(alpha, t_comp, mask)
+
+
+def test_round_time_above_compute_floor():
+    svc = _random_service(0)
+    b = jnp.array([1.0, 2.0, 0.5, 3.0])
+    t = intra.solve_round_time(svc, b)
+    assert bool(jnp.all(t > svc.t_comp_max()))
+
+
+def test_allocation_sums_to_budget_and_equalizes():
+    svc = _random_service(1)
+    b = jnp.array([1.0, 2.0, 0.5, 3.0])
+    alloc = intra.client_allocation(svc, b)
+    np.testing.assert_allclose(np.asarray(alloc.sum(-1)), np.asarray(b), rtol=1e-5)
+    # At the optimum every *valid* client finishes at t* (Eq. 6).
+    t = intra.solve_round_time(svc, b)
+    finish = svc.t_comp + svc.alpha / jnp.maximum(alloc, 1e-30)
+    finish = jnp.where(svc.mask, finish, t[:, None])
+    np.testing.assert_allclose(np.asarray(finish), np.asarray(t)[:, None] * np.ones_like(finish), rtol=1e-3)
+
+
+def test_optimality_vs_random_splits():
+    """No random feasible split beats the equal-finish-time solution."""
+    svc = _random_service(2)
+    b = jnp.array([1.0, 1.5, 2.0, 0.8])
+    t_opt = intra.solve_round_time(svc, b)
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        w = rng.uniform(0.05, 1.0, size=svc.alpha.shape).astype(np.float32)
+        w = np.where(np.asarray(svc.mask), w, 0.0)
+        w = w / w.sum(-1, keepdims=True) * np.asarray(b)[:, None]
+        t_rand = round_time_given_alloc(svc, jnp.where(svc.mask, jnp.asarray(w), 1e30))
+        assert bool(jnp.all(t_rand >= t_opt - 1e-4))
+
+
+def test_freq_monotone_increasing_and_concave():
+    svc = _random_service(3)
+    bs = jnp.linspace(0.05, 8.0, 60)
+    f = jax.vmap(lambda b: intra.freq(svc, jnp.full((4,), b)))(bs)  # (60, 4)
+    df = jnp.diff(f, axis=0)
+    assert bool(jnp.all(df > 0)), "f*(b) must be increasing"
+    d2f = jnp.diff(df, axis=0)
+    assert bool(jnp.all(d2f <= 1e-5)), "f*(b) must be concave"
+
+
+def test_freq_prime_matches_numerical_derivative():
+    svc = _random_service(4)
+    b0 = jnp.full((4,), 1.7)
+    h = 1e-2
+    f_hi = intra.freq(svc, b0 + h)
+    f_lo = intra.freq(svc, b0 - h)
+    numeric = (f_hi - f_lo) / (2 * h)
+    analytic = intra.freq_prime_at_f(svc, intra.freq(svc, b0))
+    np.testing.assert_allclose(np.asarray(analytic), np.asarray(numeric), rtol=2e-2)
+
+
+def test_bandwidth_freq_roundtrip():
+    svc = _random_service(5)
+    b = jnp.array([0.3, 1.0, 2.5, 4.0])
+    f = intra.freq(svc, b)
+    b_back = intra.bandwidth_from_freq(svc, f)
+    np.testing.assert_allclose(np.asarray(b_back), np.asarray(b), rtol=1e-3)
+
+
+def test_padding_invariance():
+    """Adding padded client slots must not change any result."""
+    svc = _random_service(6, n=3, k=6)
+    pad = 5
+    alpha = jnp.pad(svc.alpha, ((0, 0), (0, pad)))
+    t_comp = jnp.pad(svc.t_comp, ((0, 0), (0, pad)), constant_values=99.0)
+    mask = jnp.pad(svc.mask, ((0, 0), (0, pad)), constant_values=False)
+    svc_pad = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+    b = jnp.array([1.0, 2.0, 3.0])
+    np.testing.assert_allclose(
+        np.asarray(intra.freq(svc, b)), np.asarray(intra.freq(svc_pad, b)), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(intra.demand(svc, 0.5)), np.asarray(intra.demand(svc_pad, 0.5)), rtol=1e-6
+    )
+
+
+def test_demand_decreasing_in_price_and_zero_above_pmax():
+    svc = _random_service(7)
+    pmax = intra.p_max(svc)
+    lams = jnp.linspace(1e-3, float(pmax.max()) * 1.2, 50)
+    d = jax.vmap(lambda l: intra.demand(svc, l))(lams)
+    assert bool(jnp.all(jnp.diff(d, axis=0) <= 1e-5))
+    above = lams[:, None] >= pmax[None, :]
+    assert bool(jnp.all(jnp.where(above, d, 0.0) == 0.0))
+
+
+def test_price_freq_inverse_consistency():
+    svc = _random_service(8)
+    lam = 0.4 * intra.p_max(svc)
+    f = intra.freq_from_price(svc, lam)
+    lam_back = intra.price_at_freq(svc, f)
+    np.testing.assert_allclose(np.asarray(lam_back), np.asarray(lam), rtol=1e-3)
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    b_scale=st.floats(0.05, 50.0),
+    n=st.integers(1, 6),
+    k=st.integers(2, 12),
+)
+def test_property_invariants(seed, b_scale, n, k):
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(1e-3, 1.0, size=(n, k)).astype(np.float32)
+    t_comp = rng.uniform(1e-4, 0.2, size=(n, k)).astype(np.float32)
+    svc = make_service_set(alpha, t_comp)
+    b = jnp.full((n,), float(b_scale))
+    t = intra.solve_round_time(svc, b)
+    alloc = intra.client_allocation(svc, b)
+    assert bool(jnp.all(t > svc.t_comp_max()))
+    assert bool(jnp.all(alloc >= 0))
+    np.testing.assert_allclose(np.asarray(alloc.sum(-1)), np.asarray(b), rtol=1e-4)
+    f = intra.freq(svc, b)
+    assert bool(jnp.all((f > 0) & (f < intra.f_max(svc))))

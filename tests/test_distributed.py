@@ -1,0 +1,232 @@
+"""Distribution-layer tests: sharding rules, hierarchical/compressed
+collectives on 8 host devices (subprocess), fault-tolerant resume, elastic
+re-meshing."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.distributed import elastic, fault, sharding
+from repro.models import registry
+
+
+def _mesh_1d():
+    """Production-shaped 16x16 mesh, abstract (no devices needed): sharding
+    rules only read axis names/sizes."""
+    return jax.sharding.AbstractMesh(
+        (16, 16), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_param_sharding_rules_shapes():
+    """Rules produce valid specs: every sharded dim divides the axis size."""
+    mesh = _mesh_1d()
+    for name in ("gemma-2b", "deepseek-v2-236b", "llama4-maverick-400b-a17b",
+                 "xlstm-1.3b", "hymba-1.5b"):
+        cfg = configs.get_config(name)
+        params = registry.param_specs(cfg)
+        sh = sharding.param_shardings(cfg, params, mesh)
+        leaves = jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec"))
+        assert len(leaves) == len(jax.tree.leaves(params))
+
+
+def test_vocab_tables_never_fsdp_sharded():
+    """The embed/unembed FSDP exemption (the 67 GB logits-gather fix)."""
+    mesh = _mesh_1d()
+    cfg = configs.get_config("gemma-2b")
+    params = registry.param_specs(cfg)
+    sh = sharding.param_shardings(cfg, params, mesh, fsdp=True)
+    spec = sh["embed"].spec
+    assert "data" not in jax.tree.leaves(tuple(spec)), spec
+
+
+def test_expert_dim_sharded_on_model():
+    mesh = _mesh_1d()
+    cfg = configs.get_config("deepseek-v2-236b")
+    params = registry.param_specs(cfg)
+    sh = sharding.param_shardings(cfg, params, mesh, fsdp=False)
+    spec = sh["blocks"]["ffn"]["routed"]["w_gate"].spec  # (L, E, d, f)
+    assert spec[1] == "model", spec
+
+
+def test_cache_sequence_parallel_fallback():
+    """batch=1 long-context cells shard the cache on the sequence dim."""
+    mesh = _mesh_1d()
+    cfg = configs.get_config("gemma3-1b")
+    model = registry.build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(1, 4096))
+    sh = sharding.cache_shardings(cfg, cache, mesh)
+    assert sh["k"].spec[2] == "data", sh["k"].spec
+
+
+MULTIDEV = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+    from repro.distributed import collectives
+
+    mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # local shard (4, 16): dim0 must divide the intra-pod (data=4) axis for
+    # the reduce-scatter leg
+    x = jnp.arange(32 * 16, dtype=jnp.float32).reshape(32, 16)
+
+    def body(x):
+        return collectives.hierarchical_psum(x, "data", "pod")
+
+    out = jax.jit(shard_map(body, mesh=mesh, in_specs=P(("pod", "data")),
+                            out_specs=P(("pod", "data"))))(x)
+    # hierarchical psum of the 8 local (4,16) blocks == their plain sum,
+    # replicated (tiled back through the out_specs concat)
+    block_sum = x.reshape(8, 4, 16).sum(0)
+    expect = jnp.tile(block_sum, (8, 1))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)
+
+    def body_c(x):
+        full, resid = collectives.compressed_psum_int8(x, "data", "pod")
+        return full, resid
+
+    full, resid = jax.jit(shard_map(body_c, mesh=mesh,
+                                    in_specs=P(("pod", "data")),
+                                    out_specs=(P(("pod", "data")), P(("pod", "data")))))(x)
+    err = np.abs(np.asarray(full) - np.asarray(expect))
+    scale = np.abs(np.asarray(expect)).max()
+    assert err.max() < 0.02 * scale + 1e-3, err.max()
+    assert np.abs(np.asarray(resid)).max() < scale  # residual bounded
+    print("COLLECTIVES-OK")
+    """
+)
+
+
+def test_hierarchical_and_compressed_collectives_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", MULTIDEV], capture_output=True,
+                         text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "COLLECTIVES-OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_resumable_loop_survives_injected_failure(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    init = {"x": jnp.zeros(())}
+
+    def step(state, t):
+        return {"x": state["x"] + t}
+
+    with pytest.raises(RuntimeError, match="injected"):
+        fault.resumable_loop(step, init, 20, mgr,
+                             fault.RestartPolicy(save_every=5), fail_at=13)
+    # restart: resumes from step 10, replays 10..19
+    final = fault.resumable_loop(step, init, 20, mgr,
+                                 fault.RestartPolicy(save_every=5))
+    assert float(final["x"]) == sum(range(20))
+
+
+def test_resume_trajectory_identical_to_uninterrupted(tmp_path):
+    """Deterministic data + checkpointing => failure-free and failed+resumed
+    runs produce identical states."""
+    mgr1 = CheckpointManager(str(tmp_path / "a"), keep=3)
+    mgr2 = CheckpointManager(str(tmp_path / "b"), keep=3)
+
+    def step(state, t):
+        key = jax.random.fold_in(jax.random.key(7), t)
+        return {"x": state["x"] * 0.9 + jax.random.normal(key, ())}
+
+    init = {"x": jnp.ones(())}
+    clean = fault.resumable_loop(step, init, 12, mgr1,
+                                 fault.RestartPolicy(save_every=4))
+    with pytest.raises(RuntimeError):
+        fault.resumable_loop(step, init, 12, mgr2,
+                             fault.RestartPolicy(save_every=4), fail_at=9)
+    resumed = fault.resumable_loop(step, init, 12, mgr2,
+                                   fault.RestartPolicy(save_every=4))
+    np.testing.assert_allclose(float(clean["x"]), float(resumed["x"]), rtol=1e-6)
+
+
+def test_elastic_remesh_factorizations():
+    plan = elastic.plan_service_remesh(256, 240, model_parallel=16)
+    assert plan["before"] == {"data": 16, "model": 16}
+    # 240 % 16 == 0 -> model parallel preserved
+    assert plan["after"] == {"data": 15, "model": 16}
+    assert not plan["model_parallel_changed"]
+    plan2 = elastic.plan_service_remesh(256, 252, model_parallel=16)
+    # 252 = 4*63 -> model shrinks to 4
+    assert plan2["after"]["model"] == 4
+    assert plan2["model_parallel_changed"]
+
+
+def test_allocator_invariant_under_remesh():
+    """The paper-layer elasticity: the bandwidth allocation is a pure function
+    of the service set, so device-layer re-meshing never changes it."""
+    from repro.core import disba, network
+    svc, _ = network.sample_services(jax.random.key(0), 8, k_max=30)
+    res = disba.solve_lambda_bisect(svc, 10.0)
+    # (solve twice to emulate re-run after remesh)
+    res2 = disba.solve_lambda_bisect(svc, 10.0)
+    np.testing.assert_array_equal(np.asarray(res.b), np.asarray(res2.b))
+
+
+EP_MOE_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models import moe
+    from repro.models.config import ModelConfig
+    from repro.distributed import api as dist_api
+
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, head_dim=16, d_ff=0, vocab_size=64,
+                      n_experts=8, n_experts_per_token=2, d_ff_expert=48,
+                      capacity_factor=8.0, dtype="float32")
+    p = moe.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (8, 16, cfg.d_model))
+    ref = moe.apply_moe_dense_ref(p, x, cfg)
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    dist_api.set_mesh(mesh)
+    out, aux = jax.jit(lambda p_, x_: moe.apply_moe(p_, x_, cfg))(p, x)
+    g = jax.jit(jax.grad(
+        lambda p_, x_: jnp.sum(moe.apply_moe(p_, x_, cfg)[0] ** 2)))(p, x)
+    dist_api.set_mesh(None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))
+    print("EP-MOE-OK")
+    """
+)
+
+
+def test_expert_parallel_moe_8dev():
+    """The shard_map expert-parallel dispatch equals the dense oracle on a
+    (data=2, model=4) mesh and differentiates cleanly (§Perf cell 2)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", EP_MOE_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "EP-MOE-OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_serve_2d_param_shardings():
+    """Serving layout: weights stationary on both axes, no FSDP gathers."""
+    mesh = _mesh_1d()
+    cfg = configs.get_config("deepseek-v2-236b")
+    params = registry.param_specs(cfg)
+    sh = sharding.param_shardings(cfg, params, mesh, serve_2d=True)
+    spec = sh["blocks"]["attn"]["wq_b"].spec     # (L, q_lora, H*(dn+dr))
+    assert spec[-1] == "model" and spec[-2] == "data", spec
+    espec = sh["blocks"]["ffn"]["routed"]["w_gate"].spec  # (L, E, d, f)
+    assert espec[1] == "model" and espec[3] == "data", espec

@@ -1,0 +1,55 @@
+"""Dry-run harness test (deliverable e): one representative cell must lower,
+compile, and report analyses on the 512-placeholder-device production mesh.
+Runs in a subprocess so the XLA device-count flag never leaks into this
+process (smoke tests must keep seeing 1 device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent(
+    """
+    import json
+    from repro.launch import dryrun  # sets XLA_FLAGS before any jax import
+
+    res = dryrun.run_cell("gemma3-1b", "decode_32k", multi_pod=True)
+    assert res["status"] == "ok", res
+    assert res["n_chips"] == 512
+    for key in ("flops", "bytes_accessed", "collective_bytes_total",
+                "compile_s", "temp_size_in_bytes"):
+        assert key in res, key
+    # skip semantics
+    skip = dryrun.run_cell("gemma-7b", "long_500k", multi_pod=False)
+    assert skip["status"] == "skipped"
+    print("DRYRUN-OK", json.dumps({k: res[k] for k in ("n_chips", "status")}))
+    """
+)
+
+
+def test_dryrun_cell_multi_pod():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, env=env, timeout=540,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "DRYRUN-OK" in out.stdout, (out.stdout[-1000:], out.stderr[-3000:])
+
+
+def test_dryrun_artifacts_complete():
+    """All 40 cells x 2 meshes have artifacts: 66 ok + 14 by-design skips."""
+    art = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                       "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        import pytest
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    cells = []
+    for name in os.listdir(art):
+        if name.endswith(".json"):
+            with open(os.path.join(art, name)) as f:
+                cells.append(json.load(f))
+    assert len(cells) == 80, len(cells)
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    assert len(ok) == 66 and len(skipped) == 14, (len(ok), len(skipped))
+    assert not [c for c in cells if c["status"] == "error"]

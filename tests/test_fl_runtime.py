@@ -1,0 +1,206 @@
+"""FL runtime tests: real federated training improves the loss, FedAvg
+equals the centralized gradient step in the 1-local-step IID case, straggler
+drop works, compression feeds the allocator, the simulator runs/restarts,
+checkpoint manager survives crashes, optimizers descend."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLM
+from repro.fl import compression, server, simulator
+from repro.fl.service import arch_service_tuple
+from repro.core.types import stack_services
+from repro.core import intra
+from repro.models import registry
+from repro.optim import adamw, sgd
+
+
+def _tiny_model():
+    cfg = configs.get_smoke_config("gemma-2b", n_layers=2, d_model=64, d_ff=128,
+                                   vocab_size=64, n_heads=2, head_dim=32)
+    return cfg, registry.build_model(cfg)
+
+
+def _client_batches(data, step, n_clients, local_steps, batch):
+    per = [
+        jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[data.batch(step * 100 + e, batch, client_id=c)
+                       for e in range(local_steps)])
+        for c in range(n_clients)
+    ]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def test_federated_training_reduces_loss():
+    cfg, model = _tiny_model()
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, seed=0, temperature=0.3)
+    params = model.init(jax.random.key(0))
+    round_step = jax.jit(server.make_fl_round_step(
+        model.loss, local_steps=2, client_lr=2.0))
+    n_clients = 4
+    weights = jnp.ones((n_clients,))
+    losses = []
+    for step in range(8):
+        batches = _client_batches(data, step, n_clients, 2, batch=8)
+        params, metrics = round_step(params, batches, weights)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_fedavg_single_step_equals_central_sgd():
+    """With 1 local step and identical client batches, FedAvg == plain SGD."""
+    cfg, model = _tiny_model()
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, seed=0)
+    params = model.init(jax.random.key(0))
+    batch = data.batch(0, 4)
+    n_clients = 3
+    batches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None, None], (n_clients, 1, *x.shape)), batch
+    )
+    round_step = server.make_fl_round_step(model.loss, local_steps=1, client_lr=0.1)
+    p_fed, _ = round_step(params, batches, jnp.ones((n_clients,)))
+    g = jax.grad(model.loss)(params, batch)
+    p_sgd = jax.tree.map(lambda p, gr: p - 0.1 * gr, params, g)
+    for a, b in zip(jax.tree.leaves(p_fed), jax.tree.leaves(p_sgd)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_straggler_drop_excludes_late_clients():
+    lat = jnp.array([0.1, 0.5, 3.0, 0.2])
+    w = server.straggler_weights(lat, deadline=1.0)
+    np.testing.assert_array_equal(np.asarray(w), [1, 1, 0, 1])
+    deltas = {"w": jnp.arange(4, dtype=jnp.float32)[:, None] * jnp.ones((4, 2))}
+    agg = server.fedavg_round(deltas, w)
+    np.testing.assert_allclose(np.asarray(agg["w"]), (0 + 1 + 3) / 3.0)
+
+
+def test_compression_error_feedback_converges():
+    """Error feedback telescopes exactly: sum of transmissions equals
+    n*delta - final residual, and the residual stays bounded (never grows
+    past the scale set by the largest untransmitted mass)."""
+    delta = {"w": jax.random.normal(jax.random.key(0), (64,))}
+    residual = jax.tree.map(jnp.zeros_like, delta)
+    sent_total = jnp.zeros((64,))
+    n = 30
+    max_res = 0.0
+    for _ in range(n):
+        sparse, residual = compression.topk_sparsify(delta, 0.1, residual)
+        sent_total = sent_total + sparse["w"]
+        max_res = max(max_res, float(jnp.max(jnp.abs(residual["w"]))))
+    np.testing.assert_allclose(
+        np.asarray(sent_total), np.asarray(n * delta["w"] - residual["w"]),
+        rtol=1e-4, atol=1e-4,
+    )
+    # bounded residual: top-k with EF cannot accumulate more than ~1/k_frac
+    # rounds' worth of the largest entry
+    assert max_res < 12 * float(jnp.max(jnp.abs(delta["w"])))
+
+
+def test_compression_ratio_feeds_allocator():
+    """Compressed uplink shrinks alpha and strictly increases f* at fixed b."""
+    cfg = configs.get_smoke_config("gemma-2b")
+    r = jnp.full((4,), 8.0)
+    phi = jnp.full((4,), 1e12)
+    dense = arch_service_tuple(cfg, r_dl=r, r_ul=r, client_flops=phi)
+    comp = arch_service_tuple(
+        cfg, r_dl=r, r_ul=r, client_flops=phi,
+        uplink_compression=compression.compression_ratio("topk", 0.01),
+    )
+    svc = stack_services([dense, comp])
+    b = jnp.array([1.0, 1.0])
+    f = intra.freq(svc, b)
+    assert float(f[1]) > float(f[0])
+
+
+def test_int8_quantization_bounded_error():
+    delta = {"w": jax.random.normal(jax.random.key(1), (256,))}
+    deq, res = compression.int8_quantize(delta)
+    scale = float(jnp.max(jnp.abs(delta["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(res["w"]))) <= scale * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("policy", ["coop", "selfish", "ec", "es", "pp"])
+def test_simulator_runs_all_policies(policy):
+    cfg = simulator.SimConfig(policy=policy, n_services_total=3,
+                              rounds_required=150, p_arrive=2.0, seed=1)
+    out = simulator.run(cfg)
+    assert out["finished"]
+    assert out["avg_duration"] >= 1.0
+
+
+def test_simulator_coop_not_worse_than_equal_service():
+    base = dict(n_services_total=4, rounds_required=300, p_arrive=1.0, seed=3)
+    coop = simulator.run(simulator.SimConfig(policy="coop", **base))
+    es = simulator.run(simulator.SimConfig(policy="es", **base))
+    assert coop["avg_duration"] <= es["avg_duration"] + 1e-9
+
+
+def test_simulator_resumes_from_state():
+    cfg = simulator.SimConfig(policy="coop", n_services_total=3,
+                              rounds_required=200, p_arrive=1.0, seed=5,
+                              max_periods=3)
+    partial = simulator.run(cfg)
+    assert not partial["finished"]
+    cfg_full = simulator.SimConfig(policy="coop", n_services_total=3,
+                                   rounds_required=200, p_arrive=1.0, seed=5)
+    resumed = simulator.run(cfg_full, state=partial["state"])
+    fresh = simulator.run(cfg_full)
+    assert resumed["finished"] and fresh["finished"]
+    assert resumed["durations"] == fresh["durations"]
+
+
+def test_checkpoint_roundtrip_and_crash_recovery(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(5, dtype=jnp.float32), "b": {"c": jnp.ones((2, 3))}}
+    mgr.save(1, tree, extra={"loss": 1.0})
+    tree2 = jax.tree.map(lambda x: x * 2, tree)
+    mgr.save(2, tree2, extra={"loss": 0.5})
+    # simulate a crash: an incomplete step dir without COMMIT
+    bad = os.path.join(str(tmp_path), "step_0000000003")
+    os.makedirs(bad)
+    with open(os.path.join(bad, "meta.json"), "w") as f:
+        f.write("{}")
+    step, restored, extra = mgr.restore_latest(tree)
+    assert step == 2 and extra == {"loss": 0.5}
+    np.testing.assert_allclose(np.asarray(restored["a"]), np.asarray(tree2["a"]))
+
+
+def test_checkpoint_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_adamw_descends_quadratic():
+    init, update = adamw(lr=0.1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, state = update(g, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_sgd_momentum_descends():
+    init, update = sgd(lr=0.05, momentum=0.9)
+    params = {"w": jnp.array([3.0])}
+    state = init(params)
+    for _ in range(200):
+        params, state = update({"w": 2 * params["w"]}, state, params)
+    assert abs(float(params["w"][0])) < 1e-2
+
+
+def test_synthetic_data_deterministic_and_learnable():
+    data = SyntheticLM(vocab_size=64, seq_len=8, seed=0)
+    b1 = data.batch(3, 4)
+    b2 = data.batch(3, 4)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = data.batch(4, 4)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))

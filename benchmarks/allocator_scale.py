@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import disba, intra, network
+from repro.core import disba, intra, network, policy
 from repro.core.types import ServiceSet
+from repro.fl import simulator
 
 
 def _sequential_disba(svc: ServiceSet, B: float, gamma=0.1, eps=1e-3,
@@ -91,5 +92,35 @@ def run() -> list[dict]:
         lambda: intra.client_allocation_jit(svc, b), iters=3)
     rows.append(common.row("scale/intra_alloc_N10000", us_intra,
                            f"ns_per_service={1e3 * us_intra / 10_000:.1f}"))
+
+    # ---- AllocationPolicy registry: every policy as one jitted call, N=1000
+    svc_p, _ = network.sample_services(jax.random.key(5), 1_000, k_max=32)
+    for name in policy.available():
+        pfn = jax.jit(policy.get_policy(name))
+        us = common.time_fn(lambda f=pfn: f(svc_p, B), iters=3)
+        rows.append(common.row(f"policy/{name}_N1000", us,
+                               f"us_per_service={us / 1_000:.2f}"))
+
+    # ---- multi-period engines: one-compile lax.scan vs legacy Python loop
+    sim_cfg = simulator.SimConfig(
+        policy="coop", n_services_total=16, rounds_required=100,
+        p_arrive=1.0, max_periods=64, k_max=32, seed=0,
+    )
+    us_scan = common.time_fn(lambda: simulator.run_scan(sim_cfg), iters=3)
+    simulator.run(sim_cfg)                      # warm the step's jit cache
+    t0 = time.perf_counter()
+    simulator.run(sim_cfg)
+    us_legacy = (time.perf_counter() - t0) * 1e6
+    rows.append(common.row("sim/scan_64periods", us_scan,
+                           f"us_per_period={us_scan / 64:.1f} "
+                           f"speedup_vs_loop={us_legacy / us_scan:.1f}x"))
+    rows.append(common.row("sim/python_loop_64periods", us_legacy, ""))
+
+    # ---- scenario sweep: the same compiled episode vmapped over 16 seeds
+    us_batch = common.time_fn(
+        lambda: simulator.run_batch(sim_cfg, seeds=range(16)), iters=3)
+    rows.append(common.row("sim/batch_16seeds_64periods", us_batch,
+                           f"us_per_episode={us_batch / 16:.1f} "
+                           f"episodes_per_s={16e6 / us_batch:.1f}"))
     common.save_artifact("allocator_scale", [r for r in rows])
     return rows

@@ -3,6 +3,11 @@ multi-period simulations -- average service duration (12), client-count
 heterogeneity sweep (13), channel heterogeneity sweep (14), arrival-rate
 sweep (15).
 
+All policies dispatch through the ``core.policy`` registry, and the
+multi-period runs use the compiled scan engine's ``run_batch``: each
+(policy, sweep-point) evaluates every seed in ONE compiled call (the
+allocation step is traced once and vmapped over seeds).
+
 Scaled for CI wall-clock: rounds_required=400 (paper: 2000), services=6
 (paper: 10), 6 seeds (paper: 20 runs) -- the orderings the paper reports are
 scale-invariant and asserted in tests/test_benchmarks.py.  Pass --full to
@@ -15,68 +20,44 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import auction, baselines, disba, intra, network
+from repro.core import network, policy
 from repro.fl import simulator
 
-POLICIES = ("coop", "selfish", "ec", "es", "pp")
+POLICIES = simulator.POLICIES
 
 
-def _per_period(seeds=range(6)) -> dict:
-    """Fig 11: mean objective sum log(1+f) per policy over random periods
-    (5 services, clients ~ N(20, var 10), channels ~ N(85, var 15))."""
+def _per_period(seeds=range(6)) -> tuple[dict, dict]:
+    """Fig 11: per-policy mean of the PF objective sum log(1+f) and of the
+    total frequency sum f over random periods (5 services, clients ~
+    N(20, var 10), channels ~ N(85, var 15))."""
     cfg_net = network.NetworkConfig(mean_clients=20, var_clients=10)
-    out = {p: [] for p in POLICIES}
+    obj = {p: [] for p in POLICIES}
+    tot = {p: [] for p in POLICIES}
     for seed in seeds:
         svc, _ = network.sample_services(jax.random.key(seed), 5, cfg_net)
         B = cfg_net.total_bandwidth_mhz
         for pol in POLICIES:
-            if pol == "coop":
-                f = disba.solve_lambda_bisect(svc, B).f
-            elif pol == "selfish":
-                bid = auction.uniform_truthful_bids(svc, 5, 0.5)
-                b, _ = auction.allocate(bid, B)
-                f = intra.freq(svc, b)
-            elif pol == "ec":
-                _, f = baselines.equal_client(svc, B)
-            elif pol == "es":
-                _, f = baselines.equal_service(svc, B)
-            else:
-                _, f = baselines.proportional(svc, B)
-            out[pol].append(float(jnp.sum(jnp.log1p(f))))
-    return {p: (float(np.mean(v)), float(np.std(v))) for p, v in out.items()}
+            _, f = policy.allocate(pol, svc, B)
+            obj[pol].append(float(jnp.sum(jnp.log1p(f))))
+            tot[pol].append(float(jnp.sum(f)))
+    stat = lambda d: {p: (float(np.mean(v)), float(np.std(v))) for p, v in d.items()}
+    return stat(obj), stat(tot)
 
 
-def _per_period_total_freq(seeds=range(6)) -> dict:
-    cfg_net = network.NetworkConfig(mean_clients=20, var_clients=10)
-    out = {p: [] for p in POLICIES}
-    for seed in seeds:
-        svc, _ = network.sample_services(jax.random.key(seed), 5, cfg_net)
-        B = cfg_net.total_bandwidth_mhz
-        for pol in POLICIES:
-            if pol == "coop":
-                f = disba.solve_lambda_bisect(svc, B).f
-            elif pol == "selfish":
-                bid = auction.uniform_truthful_bids(svc, 5, 0.5)
-                b, _ = auction.allocate(bid, B)
-                f = intra.freq(svc, b)
-            elif pol == "ec":
-                _, f = baselines.equal_client(svc, B)
-            elif pol == "es":
-                _, f = baselines.equal_service(svc, B)
-            else:
-                _, f = baselines.proportional(svc, B)
-            out[pol].append(float(jnp.sum(f)))
-    return {p: (float(np.mean(v)), float(np.std(v))) for p, v in out.items()}
-
-
-def _durations(policy: str, seeds, **overrides) -> tuple[float, float]:
-    durs = []
-    base = dict(n_services_total=6, rounds_required=400, p_arrive=5.0)
+def _durations(policy_name: str, seeds, **overrides) -> tuple[float, float]:
+    """Mean/std of avg service duration over seeds -- one compiled vmapped
+    call per sweep point."""
+    base = dict(n_services_total=6, rounds_required=400, p_arrive=5.0,
+                max_periods=600, k_max=48)
     base.update(overrides)
-    for seed in seeds:
-        out = simulator.run(simulator.SimConfig(policy=policy, seed=seed, **base))
-        durs.append(out["avg_duration"])
-    return float(np.mean(durs)), float(np.std(durs))
+    out = simulator.run_batch(
+        simulator.SimConfig(policy=policy_name, **base), seeds=list(seeds)
+    )
+    if not bool(np.all(out["finished"])):
+        print(f"[warn] {policy_name} {overrides}: "
+              f"{int(np.sum(~out['finished']))} episode(s) hit max_periods")
+    avg = out["avg_duration"]
+    return float(np.mean(avg)), float(np.std(avg))
 
 
 def run(full: bool = False) -> list[dict]:
@@ -86,11 +67,10 @@ def run(full: bool = False) -> list[dict]:
     # ---- Fig 11 (both metrics: PF objective and total frequency -- the
     # paper's "overall performance" reads closest to the latter for the
     # selfish mechanism at alpha=0.5)
-    fig11 = _per_period(range(20 if full else 6))
+    fig11, fig11_f = _per_period(range(20 if full else 6))
     for pol, (mean, std) in fig11.items():
         rows.append(common.row(f"fig11/{pol}", None,
                                f"objective={mean:.4f}+-{std:.4f}"))
-    fig11_f = _per_period_total_freq(range(20 if full else 6))
     for pol, (mean, std) in fig11_f.items():
         rows.append(common.row(f"fig11_totalfreq/{pol}", None,
                                f"sum_f={mean:.2f}+-{std:.2f}"))
@@ -98,7 +78,8 @@ def run(full: bool = False) -> list[dict]:
                          {"objective": fig11, "total_freq": fig11_f})
 
     # ---- Fig 12: average duration per policy
-    over = {"rounds_required": 2000, "n_services_total": 10} if full else {}
+    over = {"rounds_required": 2000, "n_services_total": 10,
+            "max_periods": 3000} if full else {}
     fig12 = {}
     for pol in POLICIES:
         mean, std = _durations(pol, seeds, **over)

@@ -1,10 +1,14 @@
 """Example 2: REAL multi-service federated training under allocated bandwidth.
 
 Two FL services (a reduced gemma-2b and a reduced xlstm-1.3b) train
-concurrently on synthetic-but-learnable data; every period DISBA splits the
+concurrently on synthetic-but-learnable data; every period the selected
+``AllocationPolicy`` (here cooperative DISBA, resolved through the
+``core.policy`` registry -- any of coop/selfish/ec/es/pp works) splits the
 10 MHz between them, the intra-service solver splits each share across
 clients, the round-time model converts bandwidth into wall-clock rounds, and
 each service runs that many honest FedAvg rounds (with straggler deadlines).
+``--intra-backend pallas`` routes the per-client split through the
+``kernels/bisect_alloc`` TPU kernel (interpret mode on CPU).
 
 This is a thin wrapper over the production driver:
 
@@ -20,6 +24,7 @@ if __name__ == "__main__":
     sys.argv = [sys.argv[0],
                 "--services", "gemma-2b,xlstm-1.3b",
                 "--policy", "coop",
+                "--intra-backend", "reference",
                 "--periods", "3",
                 "--clients", "4",
                 "--checkpoint-dir", "/tmp/fl_quickstart_ckpt"]

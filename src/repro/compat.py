@@ -1,0 +1,67 @@
+"""Version-compatibility shims for JAX API movement.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, ``jax.sharding.AxisType`` and the ``axis_types`` kwarg of
+``jax.make_mesh`` appeared later still.  Import from here so the rest of the
+codebase works on both sides of each move.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+
+try:  # JAX >= 0.6: top-level export
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # older JAX: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+try:  # JAX >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # older JAX: every mesh axis is implicitly "auto"
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off.
+
+    JAX 0.4.x's ``check_rep`` pass rejects valid ``lax.scan`` carries whose
+    replication differs between input and output (jax-ml/jax#21931-style);
+    newer JAX renamed the flag to ``check_vma``.  Try each spelling.
+    """
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    raise TypeError("no compatible shard_map signature found")
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates older signatures without ``axis_types``."""
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices,
+                             axis_types=axis_types)
+    except TypeError:  # pre-axis_types JAX: all axes behave as Auto already
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def abstract_mesh(axis_shapes, axis_names, *, axis_types=None):
+    """``jax.sharding.AbstractMesh`` across its two historical signatures:
+    new JAX takes (sizes, names, axis_types=tuple); 0.4.x takes a single
+    ((name, size), ...) tuple."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_shapes), tuple(axis_names),
+                                         axis_types=axis_types)
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_shapes)))
+
+
+__all__ = ["shard_map", "shard_map_unchecked", "AxisType", "make_mesh",
+           "abstract_mesh"]

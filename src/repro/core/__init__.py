@@ -7,7 +7,16 @@ from repro.core.types import (  # noqa: F401
     RawServiceParams,
     ServiceSet,
     make_service_set,
+    mask_inactive,
     round_time_given_alloc,
     stack_services,
 )
-from repro.core import auction, baselines, disba, fairness, intra, network  # noqa: F401
+from repro.core import (  # noqa: F401
+    auction,
+    baselines,
+    disba,
+    fairness,
+    intra,
+    network,
+    policy,
+)

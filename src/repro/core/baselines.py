@@ -24,8 +24,9 @@ def equal_client(svc: ServiceSet, total_bandwidth: float) -> tuple[jax.Array, ja
 
 
 def equal_service(svc: ServiceSet, total_bandwidth: float) -> tuple[jax.Array, jax.Array]:
-    n = svc.n_services
-    b = jnp.full((n,), total_bandwidth / n, dtype=svc.alpha.dtype)
+    active = svc.service_active()
+    n_active = jnp.maximum(jnp.sum(active.astype(svc.alpha.dtype)), 1.0)
+    b = jnp.where(active, total_bandwidth / n_active, 0.0).astype(svc.alpha.dtype)
     return b, intra.freq(svc, b)
 
 

@@ -38,8 +38,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map_unchecked
 from repro.core import intra
 from repro.core.types import BISECT_ITERS, ServiceSet
 
@@ -144,8 +144,8 @@ def disba_trace(
     demand_fn = jax.jit(lambda l: intra.demand(svc, l))
     freq_fn = jax.jit(lambda b: intra.freq(svc, b))
     hist = {"lam": [], "b": [], "f": [], "demand_gap": []}
-    lam_prev = None
     j = 0
+    converged = False
     while j < max_iters:
         b = demand_fn(jnp.float32(lam))
         hist["lam"].append(lam)
@@ -157,11 +157,18 @@ def disba_trace(
         lam_next = min(max(lam - step * lam_scale * gap / total_bandwidth, 0.0), lam_scale)
         lam_prev, lam = lam, lam_next
         j += 1
+        # Same stopping rule as the jitted ``disba``: the *last executed*
+        # update moved less than eps (checked against the pre-update iterate,
+        # never a stale or overwritten value).
         if abs(lam - lam_prev) <= eps * lam_scale:
+            converged = True
             break
     hist["iterations"] = j
-    hist["converged"] = abs(lam - (lam_prev if lam_prev is not None else lam)) <= eps * lam_scale
-    hist["b_final"] = hist["b"][-1] * (total_bandwidth / jnp.sum(hist["b"][-1]))
+    hist["converged"] = converged
+    # Final primal at the *final* lam (matching ``disba``, which evaluates
+    # demand at the converged price), projected onto sum b = B.
+    b_last = demand_fn(jnp.float32(lam))
+    hist["b_final"] = b_last * (total_bandwidth / jnp.sum(b_last))
     hist["f_final"] = freq_fn(hist["b_final"])
     return hist
 
@@ -288,7 +295,7 @@ def disba_sharded(
         f = intra.freq(local, b, inner_iters)
         return b, f, lam
 
-    fn = shard_map(
+    fn = shard_map_unchecked(
         shard_fn,
         mesh=mesh,
         in_specs=(P(axis_names), P(axis_names), P(axis_names)),

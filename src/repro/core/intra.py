@@ -126,8 +126,14 @@ def f_max(svc: ServiceSet) -> jax.Array:
 
 
 def p_max(svc: ServiceSet) -> jax.Array:
-    """f*'(0) = 1/sum_k alpha (Eq. 32): the price above which demand is zero."""
-    return 1.0 / jnp.maximum(svc.alpha_sum(), _TINY)
+    """f*'(0) = 1/sum_k alpha (Eq. 32): the price above which demand is zero.
+
+    Inactive slots of a fixed-capacity set (alpha_sum = 0) get p_max = 0, so
+    they opt out of every market (demand 0 at any price) instead of blowing
+    up the dual bracket max_n p_max with a 1/0.
+    """
+    a_sum = svc.alpha_sum()
+    return jnp.where(a_sum > 0.0, 1.0 / jnp.maximum(a_sum, _TINY), 0.0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,227 @@
+"""Unified AllocationPolicy interface over every inter-service allocator.
+
+The paper evaluates five bandwidth-allocation regimes -- cooperative DISBA
+(§IV), the fairness-adjusted selfish auction (§V), and the EC / ES / PP
+benchmarks (§VI.D) -- and its long-term simulation re-runs the chosen one
+every period.  Related work (e.g. arXiv:2011.12469) frames all of them as
+instances of one periodic allocation step; this module is that frame:
+
+    policy(svc: ServiceSet, b_total) -> (b, f)        # both (N,)
+
+Every policy is a *pure jittable function* of a (possibly fixed-capacity,
+mask-padded) ServiceSet.  Whole-service inactivity is expressed through the
+client mask (see ``types.mask_inactive``): an all-masked row receives
+b = f = 0 from every policy, so arrivals/departures in the multi-period
+simulator are mask flips, not shape changes, and the whole episode compiles
+once.
+
+Policies are registered under string keys (``register`` /
+``get_policy`` / ``available``), replacing the old if/elif dispatch in
+``fl/simulator.py`` and ``launch/train.py``.
+
+The intra-service sub-problem (Eq. 7: optimal round time + per-client
+water-filling) is selectable via ``intra_backend``:
+
+  * ``"reference"`` -- the pure-jnp fixed-trip bisection in ``core/intra``;
+  * ``"pallas"``    -- the Pallas TPU kernel ``kernels/bisect_alloc`` (runs
+                       in interpret mode off-TPU), the deployment path for
+                       fleet-scale solves (EXPERIMENTS.md §Perf).
+
+Both backends solve the same equation with the same trip count; parity is
+asserted in tests/test_policy_simulator.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import auction, baselines, disba, intra
+from repro.core.types import BISECT_ITERS, ServiceSet
+
+INTRA_BACKENDS = ("reference", "pallas")
+
+FreqFn = Callable[[ServiceSet, jax.Array], jax.Array]
+
+
+class AllocationPolicy(Protocol):
+    """A pure inter-service allocation step: (ServiceSet, B) -> (b, f)."""
+
+    def __call__(
+        self, svc: ServiceSet, b_total: jax.Array | float
+    ) -> tuple[jax.Array, jax.Array]:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Intra-service backend selection (reference jnp vs Pallas kernel).
+# ---------------------------------------------------------------------------
+
+def _pallas_solve(svc: ServiceSet, b: jax.Array, iters: int):
+    """(t*, per-client split) via the kernel -- compiled on TPU, interpret
+    elsewhere (the ``ops.intra_allocate`` dispatch convention)."""
+    from repro.kernels import ops
+
+    return ops.intra_allocate(svc.alpha, svc.t_comp, b, use_pallas=True,
+                              iters=iters)
+
+
+def freq_fn(intra_backend: str = "reference", iters: int = BISECT_ITERS) -> FreqFn:
+    """f*(b) with the chosen intra-service solver backend."""
+    if intra_backend == "reference":
+        return lambda svc, b: intra.freq(svc, b, iters)
+    if intra_backend == "pallas":
+
+        def _freq(svc: ServiceSet, b: jax.Array) -> jax.Array:
+            t_star, _ = _pallas_solve(svc, b, iters)
+            # kernel reports t* ~ 1/TINY for b <= 0 rows; map those to f = 0
+            return jnp.where(
+                jnp.logical_and(b > 0.0, t_star < 1e20),
+                1.0 / jnp.maximum(t_star, 1e-30), 0.0,
+            )
+
+        return _freq
+    raise ValueError(f"unknown intra backend {intra_backend!r}; "
+                     f"expected one of {INTRA_BACKENDS}")
+
+
+def client_split_fn(
+    intra_backend: str = "reference", iters: int = BISECT_ITERS
+) -> Callable[[ServiceSet, jax.Array], jax.Array]:
+    """Per-client water-filling split b_{n,k} with the chosen backend."""
+    if intra_backend == "reference":
+        return lambda svc, b: intra.client_allocation(svc, b, iters)
+    if intra_backend == "pallas":
+        return lambda svc, b: _pallas_solve(svc, b, iters)[1]
+    raise ValueError(f"unknown intra backend {intra_backend!r}; "
+                     f"expected one of {INTRA_BACKENDS}")
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[..., AllocationPolicy]] = {}
+
+
+def register(name: str):
+    """Register a policy factory under ``name``.
+
+    A factory takes keyword options (n_bids, alpha_fair, intra_backend, ...)
+    and returns the pure allocation function.  Factories are free to ignore
+    options they don't use.
+    """
+
+    def deco(factory: Callable[..., AllocationPolicy]):
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_policy(
+    name: str,
+    *,
+    n_bids: int = 5,
+    alpha_fair: float = 0.5,
+    intra_backend: str = "reference",
+    iters: int = BISECT_ITERS,
+) -> AllocationPolicy:
+    """Build the named policy, wrapped so inactive slots get b = f = 0."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown policy {name!r}; available: {available()}")
+    raw = _REGISTRY[name](
+        n_bids=n_bids, alpha_fair=alpha_fair,
+        intra_backend=intra_backend, iters=iters,
+    )
+
+    def wrapped(svc: ServiceSet, b_total):
+        b, f = raw(svc, b_total)
+        active = svc.service_active()
+        # EC's min-rate round time is -inf on an empty row -> clamp, then mask.
+        b = jnp.where(active, b, 0.0)
+        f = jnp.where(active, jnp.maximum(f, 0.0), 0.0)
+        return b, f
+
+    return wrapped
+
+
+def allocate(name: str, svc: ServiceSet, b_total, **options):
+    """One-shot convenience: ``get_policy(name, **options)(svc, b_total)``."""
+    return get_policy(name, **options)(svc, b_total)
+
+
+# ---------------------------------------------------------------------------
+# The five paper policies.
+# ---------------------------------------------------------------------------
+
+@register("coop")
+def _coop(*, intra_backend: str = "reference", iters: int = BISECT_ITERS, **_):
+    """Cooperative DISBA via direct market clearing (same optimum as Alg. 1)."""
+    _freq = freq_fn(intra_backend, iters)
+
+    def fn(svc: ServiceSet, b_total):
+        res = disba.solve_lambda_bisect(svc, b_total, inner_iters=iters)
+        # the dual solve is backend-independent; only the final f*(b)
+        # evaluation goes through the selected intra backend
+        f = res.f if intra_backend == "reference" else _freq(svc, res.b)
+        return res.b, f
+
+    return fn
+
+
+@register("selfish")
+def _selfish(*, n_bids: int = 5, alpha_fair: float = 0.5,
+             intra_backend: str = "reference", iters: int = BISECT_ITERS, **_):
+    """Fairness-adjusted multi-bid auction with truthful uniform bids (§V.E)."""
+    _freq = freq_fn(intra_backend, iters)
+
+    def fn(svc: ServiceSet, b_total):
+        bid = auction.uniform_truthful_bids(svc, n_bids, alpha_fair, iters=iters)
+        b, _ = auction.allocate(bid, b_total)
+        return b, _freq(svc, b)
+
+    return fn
+
+
+@register("ec")
+def _ec(**_):
+    """Equal-Client benchmark: uniform per-client bandwidth, no intra solve."""
+
+    def fn(svc: ServiceSet, b_total):
+        return baselines.equal_client(svc, b_total)
+
+    return fn
+
+
+@register("es")
+def _es(*, intra_backend: str = "reference", iters: int = BISECT_ITERS, **_):
+    """Equal-Service benchmark: B / N_active each, optimal intra split."""
+    _freq = freq_fn(intra_backend, iters)
+
+    def fn(svc: ServiceSet, b_total):
+        b, f = baselines.equal_service(svc, b_total)
+        if intra_backend != "reference":
+            f = _freq(svc, b)
+        return b, f
+
+    return fn
+
+
+@register("pp")
+def _pp(*, intra_backend: str = "reference", iters: int = BISECT_ITERS, **_):
+    """Proportional benchmark: B * K_n / sum K, optimal intra split."""
+    _freq = freq_fn(intra_backend, iters)
+
+    def fn(svc: ServiceSet, b_total):
+        b, f = baselines.proportional(svc, b_total)
+        if intra_backend != "reference":
+            f = _freq(svc, b)
+        return b, f
+
+    return fn

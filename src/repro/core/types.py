@@ -69,6 +69,15 @@ class ServiceSet(NamedTuple):
     def client_counts(self) -> jax.Array:
         return jnp.sum(self.mask, axis=-1)
 
+    def service_active(self) -> jax.Array:
+        """(N,) bool -- True for services with at least one real client.
+
+        A fully-masked row is an *inactive slot* of a fixed-capacity set (a
+        service that has not arrived yet or has already departed); every
+        allocation policy gives it b = f = 0.
+        """
+        return jnp.any(self.mask, axis=-1)
+
 
 def make_service_set(alpha, t_comp, mask=None) -> ServiceSet:
     alpha = jnp.asarray(alpha, dtype=jnp.float32)
@@ -120,6 +129,23 @@ def stack_services(params: list[RawServiceParams], k_max: int | None = None) -> 
         t_comp = t_comp.at[i, :k].set(tc.astype(jnp.float32))
         mask = mask.at[i, :k].set(True)
     return ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+
+
+def mask_inactive(svc: ServiceSet, active: jax.Array) -> ServiceSet:
+    """Deactivate whole services in a fixed-capacity set by flipping masks.
+
+    ``active``: (N,) bool.  Inactive rows keep their shape but drop every
+    client (alpha -> 0, mask -> False), so arrivals/departures are pure mask
+    flips -- no shape change, no retrace.  This is the core device of the
+    multi-period simulator: one (capacity, K) ServiceSet serves every period.
+    """
+    row = jnp.asarray(active, dtype=bool)[:, None]
+    keep = jnp.logical_and(svc.mask, row)
+    return ServiceSet(
+        alpha=jnp.where(keep, svc.alpha, 0.0),
+        t_comp=jnp.where(keep, svc.t_comp, 0.0),
+        mask=keep,
+    )
 
 
 def round_time_given_alloc(svc: ServiceSet, b_clients: jax.Array) -> jax.Array:

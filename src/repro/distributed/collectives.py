@@ -17,16 +17,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 
 def hierarchical_psum(x: jax.Array, intra_axis: str, inter_axis: str) -> jax.Array:
     """psum over (intra, inter) via RS -> AR -> AG.  Must run inside
     shard_map with both axes present.  x's leading dim must divide the intra
     axis size."""
-    n_intra = jax.lax.axis_size(intra_axis)
-    idx = jax.lax.axis_index(intra_axis)
-    shard_len = x.shape[0] // n_intra
     # reduce-scatter intra-pod: each intra-rank owns one shard of the sum
     scattered = jax.lax.psum_scatter(x, intra_axis, scatter_dimension=0,
                                      tiled=True)

@@ -6,24 +6,59 @@ active set is (re-)allocated bandwidth by the selected policy -- this periodic
 re-solve is the paper's elasticity mechanism: arrivals/departures change the
 allocation without disturbing the surviving services' state.
 
-Policies: coop (DISBA), selfish (multi-bid auction), ec / es / pp benchmarks.
-The simulator is checkpointable (plain dict state) so long runs restart after
-a crash -- exercised by tests/test_fl_runtime.py.
+Engines
+-------
+
+``run_scan`` -- the production engine.  The episode state lives in a
+*fixed-capacity* ServiceSet (capacity = ``n_services_total``); a service that
+has not arrived yet or has already finished is an all-masked row
+(``types.mask_inactive``), so arrivals/departures are mask flips, never shape
+changes.  The entire multi-period loop is one ``jax.lax.scan`` whose body --
+sample channels, flip activity masks, run the ``AllocationPolicy`` -- is
+traced exactly once per (policy, shape) combination, no matter how many
+periods or episodes run (see ``trace_count``).  ``run_batch`` vmaps the same
+compiled episode over a batch of seeds for scenario sweeps: one compiled call
+evaluates many network conditions.
+
+``run`` -- the legacy per-period Python loop, kept as the checkpointable
+reference engine (plain-dict state survives crashes; exercised by
+tests/test_fl_runtime.py).  It consumes the *same* per-period step math as
+the scan engine, so the two produce identical durations on the same seed
+(asserted in tests/test_policy_simulator.py).
+
+Policies: coop (DISBA), selfish (multi-bid auction), ec / es / pp benchmarks
+-- all resolved through the string-keyed ``core.policy`` registry, including
+the selectable intra-service backend (reference bisection or the Pallas
+``bisect_alloc`` kernel).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import auction, baselines, disba, network
-from repro.core.types import ServiceSet
-from repro.fl.service import FLService
+from repro.core import network, policy as policy_mod
+from repro.core.types import mask_inactive
 
 POLICIES = ("coop", "selfish", "ec", "es", "pp")
+
+# Incremented each time the per-period allocation step is *traced* (not run).
+# The scan engine's acceptance bar is exactly one trace per episode shape --
+# mask flips must never retrigger compilation.
+_TRACE_COUNTS = {"allocation_step": 0}
+
+
+def trace_count() -> int:
+    return _TRACE_COUNTS["allocation_step"]
+
+
+def reset_trace_count() -> None:
+    _TRACE_COUNTS["allocation_step"] = 0
 
 
 @dataclasses.dataclass
@@ -40,51 +75,238 @@ class SimConfig:
     alpha_fair: float = 0.5
     max_periods: int = 4000
     seed: int = 0
+    intra_backend: str = "reference"   # "reference" | "pallas"
+    k_max: int | None = None           # client-capacity pad; None -> derived
 
 
-def _allocate(policy: str, svc: ServiceSet, b_total: float, cfg: SimConfig):
-    if policy == "coop":
-        res = disba.solve_lambda_bisect(svc, b_total)
-        return res.b, res.f
-    if policy == "selfish":
-        bid = auction.uniform_truthful_bids(svc, cfg.n_bids, cfg.alpha_fair)
-        b, _ = auction.allocate(bid, b_total)
-        from repro.core import intra
-        return b, intra.freq(svc, b)
-    if policy == "ec":
-        return baselines.equal_client(svc, b_total)
-    if policy == "es":
-        return baselines.equal_service(svc, b_total)
-    if policy == "pp":
-        return baselines.proportional(svc, b_total)
-    raise ValueError(policy)
+def _default_net(cfg: SimConfig) -> network.NetworkConfig:
+    return network.NetworkConfig(
+        mean_clients=cfg.mean_clients, var_clients=cfg.var_clients,
+        mean_pathloss_db=cfg.mean_channel_db, var_pathloss_db=cfg.var_channel_db,
+    )
 
 
-def _sample_arrivals(rng: np.random.Generator, cfg: SimConfig) -> np.ndarray:
-    """Arrival period of each service: cumulative exponential gaps."""
+def _k_cap(cfg: SimConfig) -> int:
+    """Seed-independent client-capacity pad: mean + 5 sigma (counts are
+    clipped into it, so no silent truncation).  Deriving the pad from the
+    config rather than the drawn counts keeps every engine -- run, run_scan,
+    and any batch composition in run_batch -- on the same shapes, hence the
+    same RNG draws and bitwise-identical per-seed results."""
+    if cfg.k_max is not None:
+        return cfg.k_max
+    return int(np.ceil(cfg.mean_clients + 5.0 * np.sqrt(max(cfg.var_clients, 0.0))))
+
+
+def _static_draws(cfg: SimConfig, net: network.NetworkConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Episode-static randomness: arrival periods + per-service client counts.
+
+    Arrival period of each service: cumulative exponential gaps.  Counts are
+    fixed at arrival; channels are resampled per period around the service's
+    mean (inside the compiled step).
+    """
+    rng = np.random.default_rng(cfg.seed)
     gaps = rng.exponential(cfg.p_arrive, size=cfg.n_services_total)
-    return np.floor(np.cumsum(gaps)).astype(np.int64)
+    arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
+    counts = np.clip(
+        np.round(rng.normal(cfg.mean_clients, np.sqrt(max(cfg.var_clients, 1e-9)),
+                            size=cfg.n_services_total)), net.k_min, _k_cap(cfg)
+    ).astype(np.int64)
+    return arrivals, counts
+
+
+# ---------------------------------------------------------------------------
+# The shared per-period step (one trace serves every period of every episode).
+# ---------------------------------------------------------------------------
+
+def _period_step(rounds_done, duration, period, arrivals, counts, key,
+                 *, policy_fn, net, n_total: int, k_max: int,
+                 rounds_required: int):
+    """One period: sample channels, flip activity masks, allocate, advance.
+
+    All shapes are fixed at (n_total, k_max); activity is pure masking, so
+    the scan engine traces this exactly once per episode shape.
+    """
+    _TRACE_COUNTS["allocation_step"] += 1
+    key_p = jax.random.fold_in(key, period)
+    svc_full, _ = network.sample_services(
+        key_p, n_total, net, k_max=k_max, client_counts=counts,
+    )
+    active = jnp.logical_and(arrivals <= period, rounds_done < rounds_required)
+    svc = mask_inactive(svc_full, active)
+    b, f = policy_fn(svc, net.total_bandwidth_mhz)
+    rounds = jnp.maximum(
+        jnp.floor(f * jnp.float32(net.period_s)), 0.0
+    ).astype(jnp.int32)
+    rounds_done = jnp.minimum(
+        rounds_done + jnp.where(active, rounds, 0), rounds_required
+    )
+    duration = duration + active.astype(jnp.int32)
+    stats = {
+        "freq_sum": jnp.sum(f),
+        "objective": jnp.sum(jnp.log1p(f)),
+        "n_active": jnp.sum(active.astype(jnp.int32)),
+        "all_done": jnp.all(rounds_done >= rounds_required),
+    }
+    return rounds_done, duration, stats
+
+
+_EPISODE_STATICS = ("policy", "net", "n_total", "k_max", "rounds_required",
+                    "max_periods", "n_bids", "alpha_fair", "intra_backend")
+
+
+def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
+                  rounds_required, max_periods, n_bids, alpha_fair,
+                  intra_backend):
+    policy_fn = policy_mod.get_policy(
+        policy, n_bids=n_bids, alpha_fair=alpha_fair,
+        intra_backend=intra_backend,
+    )
+
+    def step(carry, period):
+        rounds_done, duration = carry
+        rounds_done, duration, stats = _period_step(
+            rounds_done, duration, period, arrivals, counts, key,
+            policy_fn=policy_fn, net=net, n_total=n_total, k_max=k_max,
+            rounds_required=rounds_required,
+        )
+        return (rounds_done, duration), stats
+
+    init = (jnp.zeros((n_total,), jnp.int32), jnp.zeros((n_total,), jnp.int32))
+    (rounds_done, duration), hist = jax.lax.scan(
+        step, init, jnp.arange(max_periods, dtype=jnp.int32)
+    )
+    return rounds_done, duration, hist
+
+
+_episode = functools.partial(jax.jit, static_argnames=_EPISODE_STATICS)(_episode_impl)
+
+
+@functools.partial(jax.jit, static_argnames=_EPISODE_STATICS)
+def _episode_batch(arrivals, counts, keys, *, policy, net, n_total, k_max,
+                   rounds_required, max_periods, n_bids, alpha_fair,
+                   intra_backend):
+    """vmap of the episode over a leading seeds axis -- one compiled call
+    evaluates a whole scenario sweep."""
+
+    def one(a, c, k):
+        return _episode_impl(
+            a, c, k, policy=policy, net=net, n_total=n_total, k_max=k_max,
+            rounds_required=rounds_required, max_periods=max_periods,
+            n_bids=n_bids, alpha_fair=alpha_fair, intra_backend=intra_backend,
+        )
+
+    return jax.vmap(one)(arrivals, counts, keys)
+
+
+def _summarize(cfg: SimConfig, rounds_done, duration, hist) -> dict:
+    duration = np.asarray(duration)
+    done = np.asarray(hist["all_done"])
+    periods = int(np.argmax(done)) + 1 if done.any() else cfg.max_periods
+    return {
+        "avg_duration": float(np.mean(duration)),
+        "std_duration": float(np.std(duration)),
+        "durations": [int(d) for d in duration],
+        "periods": periods,
+        "history": {
+            "freq_sum": np.asarray(hist["freq_sum"])[:periods],
+            "objective": np.asarray(hist["objective"])[:periods],
+            "n_active": np.asarray(hist["n_active"])[:periods],
+        },
+        "finished": bool(np.all(np.asarray(rounds_done) >= cfg.rounds_required)),
+    }
+
+
+def _episode_statics(cfg: SimConfig, net: network.NetworkConfig,
+                     k_max: int) -> dict:
+    return dict(
+        policy=cfg.policy, net=net, n_total=cfg.n_services_total, k_max=k_max,
+        rounds_required=cfg.rounds_required, max_periods=cfg.max_periods,
+        n_bids=cfg.n_bids, alpha_fair=cfg.alpha_fair,
+        intra_backend=cfg.intra_backend,
+    )
+
+
+def run_scan(cfg: SimConfig, net: network.NetworkConfig | None = None) -> dict:
+    """Simulate one episode as a single compiled ``lax.scan``.
+
+    Returns the same summary keys as ``run`` (avg_duration, durations,
+    periods, finished) with the per-period history as stacked arrays.
+    """
+    net = net or _default_net(cfg)
+    arrivals, counts = _static_draws(cfg, net)
+    k_max = _k_cap(cfg)
+    rounds_done, duration, hist = _episode(
+        jnp.asarray(arrivals, jnp.int32), jnp.asarray(counts, jnp.int32),
+        jax.random.key(cfg.seed + 7), **_episode_statics(cfg, net, k_max),
+    )
+    return _summarize(cfg, rounds_done, duration, hist)
+
+
+def run_batch(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None) -> dict:
+    """Scenario sweep: the compiled episode vmapped over ``seeds``.
+
+    Every engine pads clients to the same config-derived ``k_max``
+    (``_k_cap``), so the sweep is a single compiled call AND each episode is
+    bitwise identical to its own ``run_scan``/``run`` regardless of which
+    other seeds share the batch.  Returns per-seed summaries stacked:
+    avg_duration (S,), durations (S, N), ...
+    """
+    net = net or _default_net(cfg)
+    seeds = list(seeds)
+    if not seeds:
+        raise ValueError("run_batch needs at least one seed")
+    draws = [_static_draws(dataclasses.replace(cfg, seed=s), net) for s in seeds]
+    arrivals = np.stack([a for a, _ in draws])
+    counts = np.stack([c for _, c in draws])
+    k_max = _k_cap(cfg)
+    keys = jax.vmap(jax.random.key)(jnp.asarray(seeds, jnp.uint32) + 7)
+    rounds_done, duration, hist = _episode_batch(
+        jnp.asarray(arrivals, jnp.int32), jnp.asarray(counts, jnp.int32),
+        keys, **_episode_statics(cfg, net, k_max),
+    )
+    duration = np.asarray(duration)
+    finished = np.all(np.asarray(rounds_done) >= cfg.rounds_required, axis=1)
+    return {
+        "seeds": seeds,
+        "avg_duration": duration.mean(axis=1),
+        "std_duration": duration.std(axis=1),
+        "durations": duration,
+        "finished": finished,
+        "history": {k: np.asarray(v) for k, v in hist.items()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Legacy checkpointable engine (reference semantics for the scan engine).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _legacy_step_jit(policy, n_bids, alpha_fair, intra_backend, net,
+                     n_total, k_max, rounds_required):
+    """Jitted period step, cached across ``run`` calls (per static shape) so
+    per-seed sweeps / resumes reuse one compilation."""
+    policy_fn = policy_mod.get_policy(
+        policy, n_bids=n_bids, alpha_fair=alpha_fair,
+        intra_backend=intra_backend,
+    )
+    return jax.jit(functools.partial(
+        _period_step, policy_fn=policy_fn, net=net,
+        n_total=n_total, k_max=k_max, rounds_required=rounds_required,
+    ))
 
 
 def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
         state: dict | None = None, checkpoint_path: str | None = None) -> dict:
-    """Simulate until every service finishes.  Returns summary + history.
+    """Per-period Python loop until every service finishes.
 
-    ``state`` resumes a previous partial run (see ``run_resumable`` in tests);
-    ``checkpoint_path`` writes a JSON snapshot each period.
+    Runs the same fixed-capacity period step as ``run_scan`` (so durations
+    match the compiled engine exactly on the same seed) but keeps plain-dict
+    state: ``state`` resumes a previous partial run and ``checkpoint_path``
+    writes a JSON snapshot each period, so long runs restart after a crash.
     """
-    net = net or network.NetworkConfig(
-        mean_clients=cfg.mean_clients, var_clients=cfg.var_clients,
-        mean_pathloss_db=cfg.mean_channel_db, var_pathloss_db=cfg.var_channel_db,
-    )
-    rng = np.random.default_rng(cfg.seed)
-    arrivals = _sample_arrivals(rng, cfg)
-    # per-service static draws (channels are resampled per period around the
-    # service's mean; counts are fixed at arrival)
-    counts = np.clip(
-        np.round(rng.normal(cfg.mean_clients, np.sqrt(max(cfg.var_clients, 1e-9)),
-                            size=cfg.n_services_total)), net.k_min, None
-    ).astype(np.int64)
+    net = net or _default_net(cfg)
+    arrivals, counts = _static_draws(cfg, net)
+    k_max = _k_cap(cfg)
 
     if state is None:
         state = {
@@ -98,7 +320,14 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
     rounds_done = list(state["rounds_done"])
     duration = list(state["duration"])
     history = list(state["history"])
-    k_max = int(counts.max())
+
+    step_jit = _legacy_step_jit(
+        cfg.policy, cfg.n_bids, cfg.alpha_fair, cfg.intra_backend, net,
+        cfg.n_services_total, k_max, cfg.rounds_required,
+    )
+    key = jax.random.key(cfg.seed + 7)
+    arrivals_j = jnp.asarray(arrivals, jnp.int32)
+    counts_j = jnp.asarray(counts, jnp.int32)
 
     while period < cfg.max_periods:
         active = [
@@ -106,27 +335,22 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
             if arrivals[i] <= period and rounds_done[i] < cfg.rounds_required
         ]
         if not active and all(
-            rounds_done[i] >= cfg.rounds_required for i in range(cfg.n_services_total)
+            r >= cfg.rounds_required for r in rounds_done
         ):
             break
         if active:
-            key = jax.random.fold_in(jax.random.key(cfg.seed + 7), period)
-            svc, _ = network.sample_services(
-                key, len(active), net, k_max=k_max,
-                client_counts=jnp.asarray(counts[active]),
+            rd, du, stats = step_jit(
+                jnp.asarray(rounds_done, jnp.int32),
+                jnp.asarray(duration, jnp.int32),
+                jnp.int32(period), arrivals_j, counts_j, key,
             )
-            b, f = _allocate(cfg.policy, svc, net.total_bandwidth_mhz, cfg)
-            rounds = np.floor(np.asarray(f) * net.period_s).astype(np.int64)
-            for j, i in enumerate(active):
-                rounds_done[i] = min(
-                    rounds_done[i] + int(rounds[j]), cfg.rounds_required
-                )
-                duration[i] += 1
+            rounds_done = [int(r) for r in np.asarray(rd)]
+            duration = [int(d) for d in np.asarray(du)]
             history.append({
                 "period": period,
                 "active": active,
-                "freq_sum": float(jnp.sum(f)),
-                "objective": float(jnp.sum(jnp.log1p(f))),
+                "freq_sum": float(stats["freq_sum"]),
+                "objective": float(stats["objective"]),
             })
         period += 1
         if checkpoint_path is not None:
@@ -135,7 +359,6 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
             tmp = checkpoint_path + ".tmp"
             with open(tmp, "w") as fp:
                 json.dump(snap, fp)
-            import os
             os.replace(tmp, checkpoint_path)
 
     return {

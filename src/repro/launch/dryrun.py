@@ -208,6 +208,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # older JAX returns a one-element list of dicts (one per device program)
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
 

@@ -7,8 +7,7 @@ smoke tests must keep seeing 1 device.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,8 +17,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     gradient all-reduce (DESIGN.md §4)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
@@ -28,5 +26,5 @@ def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
     while model_parallel > 1 and n_devices % model_parallel != 0:
         model_parallel //= 2
     data = n_devices // model_parallel
-    return jax.make_mesh((data, model_parallel), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model_parallel), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))

@@ -25,7 +25,8 @@ import numpy as np
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
-from repro.core import disba, auction, baselines, intra, network
+from repro.core import intra, network
+from repro.core import policy as policy_mod
 from repro.core.types import stack_services
 from repro.data import SyntheticLM
 from repro.fl import compression as fl_comp
@@ -34,26 +35,27 @@ from repro.fl.service import arch_service_tuple
 from repro.models import registry
 
 
-def allocate(policy, svc, b_total, n_bids=5, alpha_fair=0.5):
-    if policy == "coop":
-        res = disba.solve_lambda_bisect(svc, b_total)
-        return res.b
-    if policy == "selfish":
-        bid = auction.uniform_truthful_bids(svc, n_bids, alpha_fair)
-        b, _ = auction.allocate(bid, b_total)
-        return b
-    if policy == "es":
-        return baselines.equal_service(svc, b_total)[0]
-    if policy == "pp":
-        return baselines.proportional(svc, b_total)[0]
-    raise ValueError(policy)
+def allocate(policy, svc, b_total, n_bids=5, alpha_fair=0.5,
+             intra_backend="reference"):
+    """Inter-service split through the AllocationPolicy registry."""
+    b, _ = policy_mod.allocate(policy, svc, b_total, n_bids=n_bids,
+                               alpha_fair=alpha_fair,
+                               intra_backend=intra_backend)
+    return b
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--services", default="gemma-2b,xlstm-1.3b")
+    # "ec" is excluded: the driver applies the optimal per-client split to
+    # the service totals, which would mislabel Equal-Client (whose defining
+    # property is the *uniform* per-client split) as something better.
     ap.add_argument("--policy", default="coop",
-                    choices=["coop", "selfish", "es", "pp"])
+                    choices=sorted(set(policy_mod.available()) - {"ec"}))
+    ap.add_argument("--intra-backend", default="reference",
+                    choices=list(policy_mod.INTRA_BACKENDS),
+                    help="intra-service solver: reference jnp bisection or "
+                         "the Pallas bisect_alloc kernel (interpret off-TPU)")
     ap.add_argument("--periods", type=int, default=3)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=2)
@@ -123,10 +125,12 @@ def main() -> None:
             print(f"[resume] from period {start_period}")
 
     # ---- the period loop: allocate -> time rounds -> really train
+    client_split = policy_mod.client_split_fn(args.intra_backend)
     for period in range(start_period, args.periods):
-        b_alloc = allocate(args.policy, svc_set, net.total_bandwidth_mhz)
+        b_alloc = allocate(args.policy, svc_set, net.total_bandwidth_mhz,
+                           intra_backend=args.intra_backend)
         t_round = intra.solve_round_time(svc_set, b_alloc)
-        client_alloc = intra.client_allocation(svc_set, b_alloc)
+        client_alloc = client_split(svc_set, b_alloc)
         n_rounds = np.minimum(
             np.floor(net.period_s / np.asarray(t_round)).astype(int),
             args.max_rounds_per_period,

@@ -21,8 +21,9 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map_unchecked
 
 from repro.distributed import api as dist_api
 from repro.models import layers
@@ -223,14 +224,13 @@ def _apply_moe_ep(p: Params, x: jax.Array, cfg: ModelConfig, mesh):
         out = jax.lax.psum(out, "model")
         return out, aux
 
-    fn = shard_map(
+    fn = shard_map_unchecked(
         local_fn,
         mesh=mesh,
         in_specs=(P(data_spec, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=(P(data_spec, None), P()),
-        check_vma=False,
     )
     out, aux = fn(x.reshape(t, d), p["router"],
                   p["routed"]["w_gate"], p["routed"]["w_up"],

@@ -1,10 +1,12 @@
 """Tests for the fairness-adjusted multi-bid auction (paper §V)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import auction, disba, fairness, intra, network
 from repro.core.types import make_service_set

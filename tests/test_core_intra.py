@@ -1,10 +1,12 @@
 """Unit + property tests for the intra-service allocator (paper Eqns. 1-10, 14)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import intra
 from repro.core.types import ServiceSet, make_service_set, round_time_given_alloc

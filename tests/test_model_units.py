@@ -3,12 +3,14 @@ chunkwise vs fully-parallel vs sequential, SSM scan vs naive recurrence,
 masks, RoPE/M-RoPE, chunked attention vs plain attention."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import layers, moe, ssm
 from repro.models.config import ModelConfig

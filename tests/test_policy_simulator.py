@@ -1,0 +1,166 @@
+"""AllocationPolicy registry + fixed-capacity scan simulator + Pallas intra
+backend: registry completeness, mask-flip inactivity vs subset solves,
+kernel-vs-reference parity on padded ServiceSets, scan-vs-legacy regression,
+single-trace compilation, and the vmap-over-seeds batch entry."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import intra, network, policy
+from repro.core.types import ServiceSet, mask_inactive
+from repro.fl import simulator
+from repro.kernels.bisect_alloc import bisect_alloc
+
+B = network.B_TOTAL_MHZ
+
+
+def _random_padded_service(seed, n=7, k=33):
+    """Random ServiceSet with ragged client counts AND some all-inactive rows."""
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(0.01, 0.3, size=(n, k)).astype(np.float32)
+    t_comp = rng.uniform(0.01, 0.06, size=(n, k)).astype(np.float32)
+    mask = np.zeros((n, k), dtype=bool)
+    for i in range(n):
+        mask[i, : rng.integers(2, k + 1)] = True
+    mask[rng.integers(0, n)] = False          # one fully-inactive slot
+    alpha = np.where(mask, alpha, 0.0)
+    t_comp = np.where(mask, t_comp, 0.0)
+    return ServiceSet(alpha=jnp.asarray(alpha), t_comp=jnp.asarray(t_comp),
+                      mask=jnp.asarray(mask))
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_paper_policies():
+    assert set(simulator.POLICIES) <= set(policy.available())
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown policy"):
+        policy.get_policy("nope")
+    with pytest.raises(ValueError, match="intra backend"):
+        policy.freq_fn("nope")
+
+
+@pytest.mark.parametrize("name", simulator.POLICIES)
+def test_policies_feasible_and_zero_on_inactive(name):
+    svc = _random_padded_service(0)
+    b, f = policy.allocate(name, svc, B)
+    active = np.asarray(svc.service_active())
+    np.testing.assert_allclose(float(jnp.sum(b)), B, rtol=1e-5)
+    assert np.all(np.asarray(b)[~active] == 0.0)
+    assert np.all(np.asarray(f)[~active] == 0.0)
+    assert np.all(np.asarray(f) >= 0.0)
+
+
+@pytest.mark.parametrize("name", simulator.POLICIES)
+def test_mask_flip_matches_subset_solve(name):
+    """Deactivating rows of a fixed-capacity set must equal solving the
+    dense subset: the core invariant behind the scan simulator."""
+    svc, _ = network.sample_services(jax.random.key(2), 6, k_max=28)
+    active = jnp.array([True, False, True, True, False, True])
+    idx = np.where(np.asarray(active))[0]
+    sub = ServiceSet(alpha=svc.alpha[idx], t_comp=svc.t_comp[idx],
+                     mask=svc.mask[idx])
+    b_m, f_m = policy.allocate(name, mask_inactive(svc, active), B)
+    b_s, f_s = policy.allocate(name, sub, B)
+    np.testing.assert_allclose(np.asarray(b_m)[idx], np.asarray(b_s),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(f_m)[idx], np.asarray(f_s),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel as intra backend (interpret mode on CPU).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bisect_alloc_kernel_matches_reference_on_padded_sets(seed):
+    svc = _random_padded_service(seed)
+    rng = np.random.default_rng(seed + 100)
+    b = jnp.asarray(
+        np.where(np.asarray(svc.service_active()),
+                 rng.uniform(0.3, 3.0, size=svc.n_services), 0.0),
+        jnp.float32,
+    )
+    t_k, balloc_k = bisect_alloc(svc.alpha, svc.t_comp, b, interpret=True)
+    t_ref = intra.solve_round_time(svc, b)
+    balloc_ref = intra.client_allocation(svc, b)
+    act = np.asarray(svc.service_active()) & (np.asarray(b) > 0)
+    np.testing.assert_allclose(np.asarray(t_k)[act], np.asarray(t_ref)[act],
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(balloc_k)[act],
+                               np.asarray(balloc_ref)[act],
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_pallas_intra_backend_matches_reference_freq():
+    svc = _random_padded_service(3)
+    b = jnp.where(svc.service_active(), B / svc.n_services, 0.0)
+    f_ref = policy.freq_fn("reference")(svc, b)
+    f_pal = policy.freq_fn("pallas")(svc, b)
+    np.testing.assert_allclose(np.asarray(f_pal), np.asarray(f_ref),
+                               rtol=1e-4, atol=1e-6)
+    s_ref = policy.client_split_fn("reference")(svc, b)
+    s_pal = policy.client_split_fn("pallas")(svc, b)
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_simulator_runs_with_pallas_backend():
+    cfg = simulator.SimConfig(policy="coop", n_services_total=2,
+                              rounds_required=80, p_arrive=1.0, seed=0,
+                              max_periods=40, intra_backend="pallas")
+    ref = simulator.run_scan(dataclasses.replace(cfg, intra_backend="reference"))
+    out = simulator.run_scan(cfg)
+    assert out["finished"]
+    assert out["durations"] == ref["durations"]
+
+
+# ---------------------------------------------------------------------------
+# Scan engine: regression vs legacy loop, single trace, batch entry.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", simulator.POLICIES)
+def test_scan_reproduces_legacy_loop(name):
+    cfg = simulator.SimConfig(policy=name, n_services_total=3,
+                              rounds_required=150, p_arrive=2.0, seed=1,
+                              max_periods=120)
+    legacy = simulator.run(cfg)
+    scan = simulator.run_scan(cfg)
+    assert legacy["finished"] and scan["finished"]
+    assert scan["durations"] == legacy["durations"]
+    assert scan["avg_duration"] == legacy["avg_duration"]
+    assert scan["periods"] == legacy["periods"]
+
+
+def test_scan_single_trace_for_full_episode():
+    """Acceptance bar: a capacity-10 episode compiles the allocation step
+    exactly once -- arrivals/departures are mask flips, never retraces."""
+    cfg = simulator.SimConfig(policy="coop", n_services_total=10,
+                              rounds_required=60, p_arrive=3.0, seed=0,
+                              max_periods=100)
+    simulator.reset_trace_count()
+    out = simulator.run_scan(cfg)
+    assert out["finished"]
+    assert simulator.trace_count() == 1
+    # a second episode of the same shape reuses the compiled step entirely
+    simulator.run_scan(dataclasses.replace(cfg, seed=0))
+    assert simulator.trace_count() == 1
+
+
+def test_batch_matches_single_seed_runs():
+    base = simulator.SimConfig(policy="es", n_services_total=3,
+                               rounds_required=100, p_arrive=2.0,
+                               max_periods=100, k_max=32)
+    seeds = [0, 1, 2]
+    batch = simulator.run_batch(base, seeds)
+    for i, s in enumerate(seeds):
+        single = simulator.run_scan(dataclasses.replace(base, seed=s))
+        assert list(batch["durations"][i]) == single["durations"]
+        assert batch["avg_duration"][i] == single["avg_duration"]

@@ -7,16 +7,16 @@ import math
 import pytest
 
 from repro import configs
+from repro.compat import AxisType, abstract_mesh
 from repro.distributed import sharding
 from repro.models import registry
 
 
 def _meshes():
-    at = (jax.sharding.AxisType.Auto,)
+    at = (AxisType.Auto,)
     return [
-        jax.sharding.AbstractMesh((16, 16), ("data", "model"), axis_types=at * 2),
-        jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                                  axis_types=at * 3),
+        abstract_mesh((16, 16), ("data", "model"), axis_types=at * 2),
+        abstract_mesh((2, 16, 16), ("pod", "data", "model"), axis_types=at * 3),
     ]
 
 

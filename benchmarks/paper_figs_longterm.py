@@ -1,7 +1,9 @@
 """Paper Figs. 11-15: per-period policy comparison (11) and the long-term
 multi-period simulations -- average service duration (12), client-count
 heterogeneity sweep (13), channel heterogeneity sweep (14), arrival-rate
-sweep (15).
+sweep (15) -- plus two scenario sweeps beyond the paper: temporally-
+correlated Gauss-Markov fading (figS1) and bursty MMPP arrivals (figS2),
+driven through the ``repro.scenarios`` registries.
 
 All policies dispatch through the ``core.policy`` registry, and the
 multi-period runs use the compiled scan engine's ``run_batch``: each
@@ -20,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro import scenarios
 from repro.core import network, policy
 from repro.fl import simulator
 
@@ -116,4 +119,34 @@ def run(full: bool = False) -> list[dict]:
         rows.append(common.row(f"fig15/p_arrive{p_arrive}", None,
                                f"avg_duration={mean:.2f}+-{std:.2f}"))
     common.save_artifact("fig15_arrival", fig15)
+
+    # ---- Scenario sweep A (beyond the paper): temporally-correlated fading.
+    # rho = 0 is the paper's i.i.d. redraw; rising correlation lengthens the
+    # episodes a policy spends stuck with an unlucky channel -- exactly the
+    # regime the Fig. 13-14 robustness claims should be read against.
+    figS1 = {}
+    for rho in (0.0, 0.9, 0.99):
+        for pol in ("coop", "es"):
+            mean, std = _durations(
+                pol, seeds,
+                channel_process=scenarios.spec("gauss_markov", rho=rho), **over)
+            figS1[f"{pol}/rho{rho}"] = (mean, std)
+            rows.append(common.row(f"figS1_corr_fading/{pol}/rho{rho}", None,
+                                   f"avg_duration={mean:.2f}+-{std:.2f}"))
+    common.save_artifact("figS1_correlated_fading", figS1)
+
+    # ---- Scenario sweep B (beyond the paper): bursty MMPP arrivals at a
+    # fixed long-run rate -- the load pattern that stresses the auction's
+    # fairness-under-contention claim (Fig. 15).
+    figS2 = {}
+    for burst in (1.0, 4.0, 8.0):
+        for pol in ("coop", "selfish"):
+            mean, std = _durations(
+                pol, seeds,
+                arrival_process=scenarios.spec("mmpp", burst=burst, stay=0.8),
+                **over)
+            figS2[f"{pol}/burst{burst}"] = (mean, std)
+            rows.append(common.row(f"figS2_bursty_arrivals/{pol}/burst{burst}",
+                                   None, f"avg_duration={mean:.2f}+-{std:.2f}"))
+    common.save_artifact("figS2_bursty_arrivals", figS2)
     return rows

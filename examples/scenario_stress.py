@@ -1,0 +1,78 @@
+"""Scenario stress test: every policy through a churn-heavy edge network.
+
+The paper evaluates its five allocation regimes under i.i.d. channels and
+smooth Poisson arrivals.  This example re-runs all of them through the
+scenario engine's worst weather -- temporally-correlated Rayleigh fading on
+top of Gauss-Markov shadowing, bursty MMPP arrivals, and Gilbert client
+churn with long outages -- and compares average service durations against
+the calm (paper-default) scenario.  Each (policy, scenario) cell is one
+compiled `run_batch` call over several seeds.
+
+  PYTHONPATH=src python examples/scenario_stress.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro import scenarios
+from repro.fl import simulator
+
+SEEDS = [0, 1, 2, 3]
+
+calm = simulator.SimConfig(
+    n_services_total=4, rounds_required=400, p_arrive=3.0,
+    mean_clients=15.0, var_clients=10.0, max_periods=400, k_max=32,
+)
+
+stormy = dataclasses.replace(
+    calm,
+    # deep fades that persist across periods, on slowly-moving shadowing
+    channel_process=scenarios.spec("rayleigh_block", rho=0.9,
+                                   shadowing_rho=0.8),
+    # flash-crowd onboarding: bursts of arrivals at the same long-run rate
+    arrival_process=scenarios.spec("mmpp", burst=8.0, stay=0.8),
+    # a fifth of the fleet drops each period and takes a while to return;
+    # one anchor client per service stays reachable
+    churn_process=scenarios.spec("gilbert", p_drop=0.2, p_return=0.3,
+                                 always_keep=1),
+)
+
+print(f"{len(SEEDS)} seeds x {calm.max_periods} periods, "
+      f"{calm.n_services_total} services, {calm.rounds_required} rounds each\n")
+print(f"{'policy':>8s} | {'calm dur':>9s} | {'stormy dur':>10s} | "
+      f"{'ratio':>6s} | {'avail clients':>13s} | stalls")
+print("-" * 72)
+
+for pol in simulator.POLICIES:
+    rows = {}
+    for label, cfg in (("calm", calm), ("stormy", stormy)):
+        out = simulator.run_batch(dataclasses.replace(cfg, policy=pol), SEEDS)
+        rows[label] = out
+    calm_d = float(np.mean(rows["calm"]["avg_duration"]))
+    storm_d = float(np.mean(rows["stormy"]["avg_duration"]))
+    hist = rows["stormy"]["history"]
+    busy = hist["n_active"] > 0
+    # churn-visible fleet: available clients per active service
+    avail = float(np.sum(hist["n_clients"][busy])
+                  / max(np.sum(hist["n_active"][busy]), 1))
+    calm_h = rows["calm"]["history"]
+    calm_busy = calm_h["n_active"] > 0
+    calm_avail = float(np.sum(calm_h["n_clients"][calm_busy])
+                       / max(np.sum(calm_h["n_active"][calm_busy]), 1))
+    # periods where arrived-but-empty services made zero progress
+    stalls = int(np.sum(busy & (hist["freq_sum"] == 0.0)))
+    unfinished = int(np.sum(~rows["stormy"]["finished"]))
+    note = f"{stalls}" + (f", {unfinished} hit max_periods" if unfinished else "")
+    print(f"{pol:>8s} | {calm_d:9.2f} | {storm_d:10.2f} | "
+          f"{storm_d / max(calm_d, 1e-9):5.2f}x | "
+          f"{avail:5.1f} (vs {calm_avail:4.1f}) | {note}")
+
+print("""
+Same long-run arrival rate, same average channel, same enrolled fleet --
+only the temporal structure changed.  Two opposing forces emerge: Gilbert
+churn thins each synchronous round (fewer available clients -> shorter
+rounds), while correlated fades and arrival bursts pile services onto bad
+channels at the same time.  The optimizing policies (coop/selfish/es/pp)
+net out *faster* by re-solving around the surviving clients each period;
+equal-client -- the one policy with no intra-service optimization -- is the
+one that degrades.  None of this is visible under i.i.d. evaluation.""")

@@ -59,18 +59,42 @@ def sample_client_counts(key, n: int, cfg: NetworkConfig) -> jax.Array:
     return jnp.clip(jnp.round(k), cfg.k_min, None).astype(jnp.int32)
 
 
+def channel_innovations(key: jax.Array, n_services: int, k_max: int) -> tuple[jax.Array, jax.Array]:
+    """The exact standard-normal path-loss draws ``sample_services`` consumes.
+
+    Returns ``(eps_service (N, 1), eps_client (N, K))`` from the same key
+    split as ``sample_services(key, ...)`` -- this is the single definition
+    of those draws; sample_services' i.i.d. branch calls it, so a stateful
+    channel process (``repro.scenarios.channel``) that feeds these through
+    an AR(1) filter with correlation 0 reproduces the i.i.d. draw bitwise
+    by construction.
+    """
+    keys = jax.random.split(key, 8)
+    return (jax.random.normal(keys[1], (n_services, 1)),
+            jax.random.normal(keys[2], (n_services, k_max)))
+
+
 def sample_services(
     key: jax.Array,
     n_services: int,
     cfg: NetworkConfig = NetworkConfig(),
     k_max: int | None = None,
     client_counts: jax.Array | None = None,
+    channel_normals: tuple[jax.Array, jax.Array] | None = None,
+    extra_pathloss_db: jax.Array | None = None,
 ) -> tuple[ServiceSet, dict]:
     """Draw a padded batch of services per §VI.A.  Returns (ServiceSet, meta).
 
     meta carries the raw draws (sizes, rates, powers) for benchmarks that need
     them (e.g. Table I reporting).  Shapes are rectangular (N, K_max) with a
     validity mask derived from the sampled client counts.
+
+    ``channel_normals`` optionally replaces the path-loss standard normals
+    (the pair ``channel_innovations`` returns) with externally-evolved ones —
+    the hook used by temporally-correlated shadowing processes.
+    ``extra_pathloss_db`` is an additive (N, K) dB term applied on top (fast
+    fading).  Every other draw (sizes, powers, compute times) stays on the
+    same key stream, so both hooks perturb *only* the channel.
     """
     keys = jax.random.split(key, 8)
     if client_counts is None:
@@ -82,12 +106,14 @@ def sample_services(
 
     shape = (n_services, k_max)
     # Per-service average path loss, then per-client spread around it (Fig. 14).
-    pl_service = cfg.mean_pathloss_db + jnp.sqrt(cfg.var_pathloss_db) * jax.random.normal(
-        keys[1], (n_services, 1)
-    )
-    pl_clients = pl_service + jnp.sqrt(cfg.var_pathloss_client_db) * jax.random.normal(
-        keys[2], shape
-    )
+    if channel_normals is None:
+        eps_service, eps_client = channel_innovations(key, n_services, k_max)
+    else:
+        eps_service, eps_client = channel_normals
+    pl_service = cfg.mean_pathloss_db + jnp.sqrt(cfg.var_pathloss_db) * eps_service
+    pl_clients = pl_service + jnp.sqrt(cfg.var_pathloss_client_db) * eps_client
+    if extra_pathloss_db is not None:
+        pl_clients = pl_clients + extra_pathloss_db
 
     size_mbit = jax.random.uniform(
         keys[3], (n_services, 1), minval=cfg.model_mbit_lo, maxval=cfg.model_mbit_hi

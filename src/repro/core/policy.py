@@ -32,6 +32,7 @@ asserted in tests/test_policy_simulator.py.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Callable, Protocol
 
 import jax
@@ -131,10 +132,20 @@ def get_policy(
     alpha_fair: float = 0.5,
     intra_backend: str = "reference",
     iters: int = BISECT_ITERS,
+    **unknown,
 ) -> AllocationPolicy:
-    """Build the named policy, wrapped so inactive slots get b = f = 0."""
+    """Build the named policy, wrapped so inactive slots get b = f = 0.
+
+    Unknown keyword options raise a ValueError: factories ignore options
+    they don't use, so a typo (``alpha_fiar=...``) would otherwise be
+    silently swallowed and the default used instead.
+    """
     if name not in _REGISTRY:
         raise ValueError(f"unknown policy {name!r}; available: {available()}")
+    if unknown:
+        raise ValueError(
+            f"unknown option(s) {sorted(unknown)} for policy {name!r}; "
+            f"known options: {list(KNOWN_OPTIONS)}")
     raw = _REGISTRY[name](
         n_bids=n_bids, alpha_fair=alpha_fair,
         intra_backend=intra_backend, iters=iters,
@@ -149,6 +160,13 @@ def get_policy(
         return b, f
 
     return wrapped
+
+
+# Derived from the signature so the unknown-option error can never list a
+# stale set of known options.
+KNOWN_OPTIONS = tuple(sorted(
+    p.name for p in inspect.signature(get_policy).parameters.values()
+    if p.kind == inspect.Parameter.KEYWORD_ONLY))
 
 
 def allocate(name: str, svc: ServiceSet, b_total, **options):

@@ -148,6 +148,24 @@ def mask_inactive(svc: ServiceSet, active: jax.Array) -> ServiceSet:
     )
 
 
+def mask_clients(svc: ServiceSet, available: jax.Array) -> ServiceSet:
+    """Drop individual clients of a padded set by flipping mask bits.
+
+    ``available``: (N, K) bool.  Unavailable clients are removed exactly like
+    padding (alpha -> 0, mask -> False); a row whose every client drops
+    becomes an inactive slot (b = f = 0 from every policy).  This is the
+    per-period churn perturbation of ``repro.scenarios.churn`` — like
+    ``mask_inactive`` it is a pure mask flip, so the simulator's compiled
+    step never retraces.
+    """
+    keep = jnp.logical_and(svc.mask, jnp.asarray(available, dtype=bool))
+    return ServiceSet(
+        alpha=jnp.where(keep, svc.alpha, 0.0),
+        t_comp=jnp.where(keep, svc.t_comp, 0.0),
+        mask=keep,
+    )
+
+
 def round_time_given_alloc(svc: ServiceSet, b_clients: jax.Array) -> jax.Array:
     """Round length t_n = max_k (t^C_{n,k} + alpha_{n,k}/b_{n,k}) for an arbitrary
     (possibly suboptimal) per-client allocation.  Used by the Equal-Client

@@ -30,6 +30,19 @@ Policies: coop (DISBA), selfish (multi-bid auction), ec / es / pp benchmarks
 -- all resolved through the string-keyed ``core.policy`` registry, including
 the selectable intra-service backend (reference bisection or the Pallas
 ``bisect_alloc`` kernel).
+
+Scenarios
+---------
+
+The stochastic environment is selected per axis through the
+``repro.scenarios`` registries (see EXPERIMENTS.md "Scenario catalogue"):
+``channel_process`` (i.i.d. redraw, Gauss-Markov shadowing, correlated
+Rayleigh block fading), ``arrival_process`` (Poisson, periodic, batched,
+bursty MMPP), and ``churn_process`` (none, Bernoulli, Gilbert client
+dropout).  Channel and churn processes are stateful ``(key, state, svc) ->
+(state, svc')`` transforms whose state rides in the scan carry, so every
+scenario combination still compiles the period step exactly once; the
+defaults reproduce the pre-scenario engine bitwise.
 """
 from __future__ import annotations
 
@@ -42,8 +55,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import scenarios
 from repro.core import network, policy as policy_mod
-from repro.core.types import mask_inactive
+from repro.core.types import ServiceSet, mask_inactive
 
 POLICIES = ("coop", "selfish", "ec", "es", "pp")
 
@@ -77,6 +91,10 @@ class SimConfig:
     seed: int = 0
     intra_backend: str = "reference"   # "reference" | "pallas"
     k_max: int | None = None           # client-capacity pad; None -> derived
+    # Scenario processes: registry keys or scenarios.spec(name, **params).
+    channel_process: str | scenarios.ScenarioSpec = "iid"
+    arrival_process: str | scenarios.ScenarioSpec = "poisson"
+    churn_process: str | scenarios.ScenarioSpec = "none"
 
 
 def _default_net(cfg: SimConfig) -> network.NetworkConfig:
@@ -100,13 +118,16 @@ def _k_cap(cfg: SimConfig) -> int:
 def _static_draws(cfg: SimConfig, net: network.NetworkConfig) -> tuple[np.ndarray, np.ndarray]:
     """Episode-static randomness: arrival periods + per-service client counts.
 
-    Arrival period of each service: cumulative exponential gaps.  Counts are
-    fixed at arrival; channels are resampled per period around the service's
-    mean (inside the compiled step).
+    Arrival periods come from the registered ``arrival_process`` (default:
+    cumulative exponential gaps, the paper's Poisson process -- same RNG
+    stream as the pre-scenario engine).  Counts are fixed at arrival;
+    channels are resampled per period by the channel process (inside the
+    compiled step).
     """
     rng = np.random.default_rng(cfg.seed)
-    gaps = rng.exponential(cfg.p_arrive, size=cfg.n_services_total)
-    arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
+    draw = scenarios.get_arrival(cfg.arrival_process)
+    arrivals = np.asarray(
+        draw(rng, cfg.n_services_total, cfg.p_arrive), dtype=np.int64)
     counts = np.clip(
         np.round(rng.normal(cfg.mean_clients, np.sqrt(max(cfg.var_clients, 1e-9)),
                             size=cfg.n_services_total)), net.k_min, _k_cap(cfg)
@@ -118,19 +139,32 @@ def _static_draws(cfg: SimConfig, net: network.NetworkConfig) -> tuple[np.ndarra
 # The shared per-period step (one trace serves every period of every episode).
 # ---------------------------------------------------------------------------
 
-def _period_step(rounds_done, duration, period, arrivals, counts, key,
-                 *, policy_fn, net, n_total: int, k_max: int,
+def _period_step(rounds_done, duration, chan_state, churn_state, period,
+                 arrivals, counts, key, *, policy_fn, chan_step, churn_step,
+                 chan_rebuilds: bool, net, n_total: int, k_max: int,
                  rounds_required: int):
-    """One period: sample channels, flip activity masks, allocate, advance.
+    """One period: evolve channels and churn, flip activity masks, allocate.
 
-    All shapes are fixed at (n_total, k_max); activity is pure masking, so
-    the scan engine traces this exactly once per episode shape.
+    All shapes are fixed at (n_total, k_max); activity and churn are pure
+    masking and the scenario processes carry fixed-shape state, so the scan
+    engine traces this exactly once per (episode shape, scenario) combo.
     """
     _TRACE_COUNTS["allocation_step"] += 1
     key_p = jax.random.fold_in(key, period)
-    svc_full, _ = network.sample_services(
-        key_p, n_total, net, k_max=k_max, client_counts=counts,
-    )
+    if chan_rebuilds:
+        # The channel process reconstructs the ServiceSet itself (on this
+        # same key, so non-channel draws match the i.i.d. path); hand it a
+        # shape/mask-only shell instead of tracing a discarded base sample.
+        mask = jnp.arange(k_max)[None, :] < counts[:, None]
+        svc_full = ServiceSet(alpha=jnp.zeros(mask.shape, jnp.float32),
+                              t_comp=jnp.zeros(mask.shape, jnp.float32),
+                              mask=mask)
+    else:
+        svc_full, _ = network.sample_services(
+            key_p, n_total, net, k_max=k_max, client_counts=counts,
+        )
+    chan_state, svc_full = chan_step(key_p, chan_state, svc_full)
+    churn_state, svc_full = churn_step(key_p, churn_state, svc_full)
     active = jnp.logical_and(arrivals <= period, rounds_done < rounds_required)
     svc = mask_inactive(svc_full, active)
     b, f = policy_fn(svc, net.total_bandwidth_mhz)
@@ -145,34 +179,43 @@ def _period_step(rounds_done, duration, period, arrivals, counts, key,
         "freq_sum": jnp.sum(f),
         "objective": jnp.sum(jnp.log1p(f)),
         "n_active": jnp.sum(active.astype(jnp.int32)),
+        "n_clients": jnp.sum(svc.mask.astype(jnp.int32)),
         "all_done": jnp.all(rounds_done >= rounds_required),
     }
-    return rounds_done, duration, stats
+    return rounds_done, duration, chan_state, churn_state, stats
 
 
 _EPISODE_STATICS = ("policy", "net", "n_total", "k_max", "rounds_required",
-                    "max_periods", "n_bids", "alpha_fair", "intra_backend")
+                    "max_periods", "n_bids", "alpha_fair", "intra_backend",
+                    "channel", "churn")
 
 
 def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
                   rounds_required, max_periods, n_bids, alpha_fair,
-                  intra_backend):
+                  intra_backend, channel, churn):
     policy_fn = policy_mod.get_policy(
         policy, n_bids=n_bids, alpha_fair=alpha_fair,
         intra_backend=intra_backend,
     )
+    chan_proc = scenarios.get_channel(channel, net)
+    churn_proc = scenarios.get_churn(churn, net)
 
     def step(carry, period):
-        rounds_done, duration = carry
-        rounds_done, duration, stats = _period_step(
-            rounds_done, duration, period, arrivals, counts, key,
-            policy_fn=policy_fn, net=net, n_total=n_total, k_max=k_max,
+        rounds_done, duration, chan_state, churn_state = carry
+        rounds_done, duration, chan_state, churn_state, stats = _period_step(
+            rounds_done, duration, chan_state, churn_state, period,
+            arrivals, counts, key,
+            policy_fn=policy_fn, chan_step=chan_proc.step,
+            churn_step=churn_proc.step, chan_rebuilds=chan_proc.rebuilds,
+            net=net, n_total=n_total, k_max=k_max,
             rounds_required=rounds_required,
         )
-        return (rounds_done, duration), stats
+        return (rounds_done, duration, chan_state, churn_state), stats
 
-    init = (jnp.zeros((n_total,), jnp.int32), jnp.zeros((n_total,), jnp.int32))
-    (rounds_done, duration), hist = jax.lax.scan(
+    init = (jnp.zeros((n_total,), jnp.int32), jnp.zeros((n_total,), jnp.int32),
+            chan_proc.init(key, n_total, k_max),
+            churn_proc.init(key, n_total, k_max))
+    (rounds_done, duration, _, _), hist = jax.lax.scan(
         step, init, jnp.arange(max_periods, dtype=jnp.int32)
     )
     return rounds_done, duration, hist
@@ -184,7 +227,7 @@ _episode = functools.partial(jax.jit, static_argnames=_EPISODE_STATICS)(_episode
 @functools.partial(jax.jit, static_argnames=_EPISODE_STATICS)
 def _episode_batch(arrivals, counts, keys, *, policy, net, n_total, k_max,
                    rounds_required, max_periods, n_bids, alpha_fair,
-                   intra_backend):
+                   intra_backend, channel, churn):
     """vmap of the episode over a leading seeds axis -- one compiled call
     evaluates a whole scenario sweep."""
 
@@ -193,6 +236,7 @@ def _episode_batch(arrivals, counts, keys, *, policy, net, n_total, k_max,
             a, c, k, policy=policy, net=net, n_total=n_total, k_max=k_max,
             rounds_required=rounds_required, max_periods=max_periods,
             n_bids=n_bids, alpha_fair=alpha_fair, intra_backend=intra_backend,
+            channel=channel, churn=churn,
         )
 
     return jax.vmap(one)(arrivals, counts, keys)
@@ -211,6 +255,7 @@ def _summarize(cfg: SimConfig, rounds_done, duration, hist) -> dict:
             "freq_sum": np.asarray(hist["freq_sum"])[:periods],
             "objective": np.asarray(hist["objective"])[:periods],
             "n_active": np.asarray(hist["n_active"])[:periods],
+            "n_clients": np.asarray(hist["n_clients"])[:periods],
         },
         "finished": bool(np.all(np.asarray(rounds_done) >= cfg.rounds_required)),
     }
@@ -223,6 +268,8 @@ def _episode_statics(cfg: SimConfig, net: network.NetworkConfig,
         rounds_required=cfg.rounds_required, max_periods=cfg.max_periods,
         n_bids=cfg.n_bids, alpha_fair=cfg.alpha_fair,
         intra_backend=cfg.intra_backend,
+        channel=scenarios.as_spec(cfg.channel_process, "iid"),
+        churn=scenarios.as_spec(cfg.churn_process, "none"),
     )
 
 
@@ -282,17 +329,44 @@ def run_batch(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None) -
 
 @functools.lru_cache(maxsize=None)
 def _legacy_step_jit(policy, n_bids, alpha_fair, intra_backend, net,
-                     n_total, k_max, rounds_required):
-    """Jitted period step, cached across ``run`` calls (per static shape) so
-    per-seed sweeps / resumes reuse one compilation."""
+                     n_total, k_max, rounds_required, channel, churn):
+    """Jitted period step + scenario processes, cached across ``run`` calls
+    (per static shape / scenario spec) so per-seed sweeps / resumes reuse one
+    compilation."""
     policy_fn = policy_mod.get_policy(
         policy, n_bids=n_bids, alpha_fair=alpha_fair,
         intra_backend=intra_backend,
     )
-    return jax.jit(functools.partial(
-        _period_step, policy_fn=policy_fn, net=net,
+    chan_proc = scenarios.get_channel(channel, net)
+    churn_proc = scenarios.get_churn(churn, net)
+    step = jax.jit(functools.partial(
+        _period_step, policy_fn=policy_fn, chan_step=chan_proc.step,
+        churn_step=churn_proc.step, chan_rebuilds=chan_proc.rebuilds, net=net,
         n_total=n_total, k_max=k_max, rounds_required=rounds_required,
     ))
+    return step, chan_proc, churn_proc
+
+
+def _scenario_state_to_json(state) -> list:
+    """Flatten a scenario-state pytree to JSON-serializable nested lists."""
+    return [np.asarray(leaf).tolist() for leaf in jax.tree_util.tree_leaves(state)]
+
+
+def _scenario_state_from_json(template, data: list):
+    """Rebuild scenario state from ``_scenario_state_to_json`` output, using
+    a freshly-initialized ``template`` for tree structure, dtypes, shapes."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(data) != len(leaves):
+        raise ValueError(
+            f"checkpointed scenario state has {len(data)} leaves, the "
+            f"configured processes expect {len(leaves)} -- was the checkpoint "
+            f"written under a different scenario?")
+    restored = [
+        jnp.asarray(np.asarray(d).reshape(np.asarray(leaf).shape),
+                    dtype=leaf.dtype)
+        for d, leaf in zip(data, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, restored)
 
 
 def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
@@ -321,41 +395,72 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
     duration = list(state["duration"])
     history = list(state["history"])
 
-    step_jit = _legacy_step_jit(
+    step_jit, chan_proc, churn_proc = _legacy_step_jit(
         cfg.policy, cfg.n_bids, cfg.alpha_fair, cfg.intra_backend, net,
         cfg.n_services_total, k_max, cfg.rounds_required,
+        scenarios.as_spec(cfg.channel_process, "iid"),
+        scenarios.as_spec(cfg.churn_process, "none"),
     )
     key = jax.random.key(cfg.seed + 7)
     arrivals_j = jnp.asarray(arrivals, jnp.int32)
     counts_j = jnp.asarray(counts, jnp.int32)
 
+    # Scenario state: same init draws as the scan engine (episode key), then
+    # restored from the snapshot when resuming mid-episode.
+    def _restore_scenario_state(name: str, template):
+        if name in state:
+            return _scenario_state_from_json(template, state[name])
+        if period > 0 and jax.tree_util.tree_leaves(template):
+            raise ValueError(
+                f"resume state has no {name!r} but the configured scenario "
+                f"processes are stateful -- was the snapshot written under a "
+                f"different scenario?")
+        return template
+
+    chan_state = _restore_scenario_state(
+        "chan_state", chan_proc.init(key, cfg.n_services_total, k_max))
+    churn_state = _restore_scenario_state(
+        "churn_state", churn_proc.init(key, cfg.n_services_total, k_max))
+
+    def _snapshot() -> dict:
+        return {"period": period, "rounds_done": rounds_done,
+                "duration": duration, "history": history,
+                "chan_state": _scenario_state_to_json(chan_state),
+                "churn_state": _scenario_state_to_json(churn_state)}
+
+    # With stateful scenario processes the step must run every period --
+    # even with no active service -- so the state trajectory matches the
+    # scan engine's period-per-step carry exactly.  Stateless processes
+    # (the defaults) keep the cheap skip of inactive periods.
+    stateless = not jax.tree_util.tree_leaves((chan_state, churn_state))
+
     while period < cfg.max_periods:
+        if all(r >= cfg.rounds_required for r in rounds_done):
+            break
         active = [
             i for i in range(cfg.n_services_total)
             if arrivals[i] <= period and rounds_done[i] < cfg.rounds_required
         ]
-        if not active and all(
-            r >= cfg.rounds_required for r in rounds_done
-        ):
-            break
-        if active:
-            rd, du, stats = step_jit(
+        if active or not stateless:
+            rd, du, chan_state, churn_state, stats = step_jit(
                 jnp.asarray(rounds_done, jnp.int32),
                 jnp.asarray(duration, jnp.int32),
+                chan_state, churn_state,
                 jnp.int32(period), arrivals_j, counts_j, key,
             )
             rounds_done = [int(r) for r in np.asarray(rd)]
             duration = [int(d) for d in np.asarray(du)]
-            history.append({
-                "period": period,
-                "active": active,
-                "freq_sum": float(stats["freq_sum"]),
-                "objective": float(stats["objective"]),
-            })
+            if active:
+                history.append({
+                    "period": period,
+                    "active": active,
+                    "freq_sum": float(stats["freq_sum"]),
+                    "objective": float(stats["objective"]),
+                    "n_clients": int(stats["n_clients"]),
+                })
         period += 1
         if checkpoint_path is not None:
-            snap = {"period": period, "rounds_done": rounds_done,
-                    "duration": duration, "history": history}
+            snap = _snapshot()
             tmp = checkpoint_path + ".tmp"
             with open(tmp, "w") as fp:
                 json.dump(snap, fp)
@@ -368,6 +473,5 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
         "periods": period,
         "history": history,
         "finished": all(r >= cfg.rounds_required for r in rounds_done),
-        "state": {"period": period, "rounds_done": rounds_done,
-                  "duration": duration, "history": history},
+        "state": _snapshot(),
     }

@@ -1,0 +1,51 @@
+"""Composable stochastic scenario processes for the multi-period simulator.
+
+Turns the single-scenario §VI reproduction into a scenario-parameterized
+evaluation engine: channel evolution (i.i.d., Gauss-Markov shadowing,
+correlated Rayleigh block fading), arrival processes (Poisson, periodic,
+batched, bursty MMPP), and client churn (Bernoulli, Gilbert) are all
+registered under string keys -- mirroring ``core.policy`` -- and selected
+from ``fl.simulator.SimConfig`` by name or parameterized ``spec``:
+
+    from repro import scenarios
+    from repro.fl import simulator
+
+    cfg = simulator.SimConfig(
+        policy="coop",
+        channel_process=scenarios.spec("gauss_markov", rho=0.95),
+        arrival_process=scenarios.spec("mmpp", burst=8.0),
+        churn_process=scenarios.spec("gilbert", p_drop=0.2, p_return=0.3),
+    )
+    out = simulator.run_scan(cfg)       # still ONE compiled lax.scan
+
+Channel and churn processes share the pure signature
+``step(key, state, svc) -> (state', svc')`` with their state threaded
+through the scan carry; arrival processes are episode-static NumPy samplers.
+See ``base`` for the registry contract and EXPERIMENTS.md for the catalogue.
+"""
+from __future__ import annotations
+
+from repro.scenarios import arrival, channel, churn  # noqa: F401  (register)
+from repro.scenarios.base import (KINDS, Process, ScenarioSpec, as_spec,
+                                  available, get_process, register, spec)
+
+__all__ = [
+    "KINDS", "Process", "ScenarioSpec", "as_spec", "available",
+    "get_process", "register", "spec",
+    "get_channel", "get_arrival", "get_churn",
+]
+
+
+def get_channel(sp, net) -> Process:
+    """Build a channel Process from a registry key / ScenarioSpec."""
+    return get_process("channel", as_spec(sp, default="iid"), net=net)
+
+
+def get_churn(sp, net) -> Process:
+    """Build a churn Process from a registry key / ScenarioSpec."""
+    return get_process("churn", as_spec(sp, default="none"), net=net)
+
+
+def get_arrival(sp):
+    """Build an arrival sampler ``draw(rng, n, mean_interval)``."""
+    return get_process("arrival", as_spec(sp, default="poisson"))

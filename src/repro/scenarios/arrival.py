@@ -1,0 +1,79 @@
+"""Arrival scenario processes: when each FL service enters the network.
+
+Episode-static NumPy samplers ``draw(rng, n, mean_interval) -> int64 (n,)``
+of non-decreasing arrival periods, consumed by the simulator's
+``_static_draws`` before compilation (arrival times are data to the compiled
+episode, so these never touch the jit cache).
+
+* ``poisson``  -- exponential inter-arrival gaps (the paper's §VI.D process
+  and the default; identical RNG stream to the pre-scenario engine).
+* ``periodic`` -- deterministic arrivals every ``mean_interval`` periods
+  (the zero-variance baseline of an arrival sweep).
+* ``batched``  -- services arrive in simultaneous groups of ``group`` with
+  exponential gaps between groups (flash-crowd onboarding).
+* ``mmpp``     -- 2-state Markov-modulated Poisson process: a *burst* state
+  draws gaps ``burst`` times shorter than the mean, a *calm* state
+  compensates so the long-run rate stays ~1/mean_interval; ``stay`` is the
+  per-arrival probability of remaining in the current state.  This is the
+  bursty-demand stressor (cf. arXiv:2011.12469's time-varying loads).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.scenarios.base import register
+
+
+@register("arrival", "poisson")
+def poisson():
+    def draw(rng, n, mean_interval):
+        gaps = rng.exponential(mean_interval, size=n)
+        return np.floor(np.cumsum(gaps)).astype(np.int64)
+
+    return draw
+
+
+@register("arrival", "periodic")
+def periodic():
+    def draw(rng, n, mean_interval):
+        return np.floor(np.arange(n, dtype=np.float64) * mean_interval).astype(np.int64)
+
+    return draw
+
+
+@register("arrival", "batched")
+def batched(group: int = 3):
+    group = int(group)
+    if group < 1:
+        raise ValueError(f"group must be >= 1, got {group}")
+
+    def draw(rng, n, mean_interval):
+        n_groups = -(-n // group)
+        gaps = rng.exponential(mean_interval * group, size=n_groups)
+        starts = np.floor(np.cumsum(gaps)).astype(np.int64)
+        return np.repeat(starts, group)[:n]
+
+    return draw
+
+
+@register("arrival", "mmpp")
+def mmpp(burst: float = 6.0, stay: float = 0.7):
+    burst = float(burst)
+    stay = float(stay)
+    if burst < 1.0:
+        raise ValueError(f"burst must be >= 1, got {burst}")
+    if not 0.0 <= stay < 1.0:
+        raise ValueError(f"stay must be in [0, 1), got {stay}")
+
+    def draw(rng, n, mean_interval):
+        # Equal-occupancy two-state chain; state means average to mean_interval.
+        means = (mean_interval / burst, mean_interval * (2.0 - 1.0 / burst))
+        state = int(rng.integers(2))
+        gaps = np.empty(n, dtype=np.float64)
+        for i in range(n):
+            gaps[i] = rng.exponential(means[state])
+            if rng.random() >= stay:
+                state = 1 - state
+        return np.floor(np.cumsum(gaps)).astype(np.int64)
+
+    return draw

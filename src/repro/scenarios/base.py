@@ -1,0 +1,154 @@
+"""Scenario-process registry: the machinery behind ``repro.scenarios``.
+
+A *scenario process* is a stateful stochastic transform of the simulated
+workload.  Two kinds exist:
+
+* **Jax processes** (kinds ``"channel"`` and ``"churn"``) follow one pure
+  signature
+
+      step(key, state, svc) -> (state', svc')
+
+  where ``state`` is an arbitrary pytree of arrays that the scan simulator
+  threads through its ``lax.scan`` carry, and ``svc`` is the period's
+  fixed-capacity ``ServiceSet``.  A companion ``init(key, n, k) -> state``
+  builds the initial (stationary) state.  Mask/shape discipline: ``svc'``
+  must keep the (N, K) shapes of ``svc`` so activity stays a mask flip and
+  the compiled period step never retraces.
+
+* **Arrival processes** (kind ``"arrival"``) are episode-static NumPy
+  samplers ``draw(rng, n, mean_interval) -> int64 (n,)`` of non-decreasing
+  arrival periods, consumed by the simulator's ``_static_draws`` before
+  compilation.
+
+Processes are registered under string keys per kind (mirroring
+``core.policy``) and selected by a hashable ``ScenarioSpec`` so specs can be
+jit statics: ``spec("gauss_markov", rho=0.95)`` or just the bare name for
+default parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Any, Callable, NamedTuple
+
+KINDS = ("channel", "arrival", "churn")
+
+# Salt offsets folded into the per-period key so scenario draws never collide
+# with the 8-way split ``network.sample_services`` consumes (periods are far
+# below 2**30, so these also never collide with a period number).
+INIT_SALT = 1 << 30
+FADING_SALT = (1 << 30) + 1
+CHURN_SALT = (1 << 30) + 2
+
+
+class Process(NamedTuple):
+    """A stateful jax scenario process (channel or churn kind).
+
+    ``rebuilds=True`` declares that ``step`` reconstructs the period's
+    ServiceSet from scratch (reading only shapes and ``client_counts()``
+    from its ``svc`` input); the simulator then skips the base i.i.d. draw
+    and hands such a process a shape/mask-only shell instead of a sampled
+    set.  Perturbing processes (churn, the identity) keep the default
+    ``False`` and receive the real sampled ServiceSet.
+    """
+
+    init: Callable[..., Any]    # (key, n, k) -> state pytree
+    step: Callable[..., Any]    # (key, state, svc) -> (state', svc')
+    rebuilds: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Hashable (name, params) pair selecting a registered process.
+
+    ``params`` is a sorted tuple of (key, value) pairs so the spec can sit in
+    a jit ``static_argnames`` slot; build via ``spec(name, **params)``.
+    """
+
+    name: str
+    params: tuple[tuple[str, Any], ...] = ()
+
+    def kwargs(self) -> dict:
+        return dict(self.params)
+
+
+def spec(name: str, **params) -> ScenarioSpec:
+    return ScenarioSpec(name, tuple(sorted(params.items())))
+
+
+def as_spec(value: str | ScenarioSpec | None, default: str) -> ScenarioSpec:
+    """Normalize a SimConfig field (name, spec, or None) to a ScenarioSpec."""
+    if value is None:
+        return ScenarioSpec(default)
+    if isinstance(value, ScenarioSpec):
+        return value
+    if isinstance(value, str):
+        return ScenarioSpec(value)
+    raise TypeError(
+        f"scenario selector must be a registry key or ScenarioSpec, got "
+        f"{type(value).__name__}: {value!r}")
+
+
+_REGISTRIES: dict[str, dict[str, Callable[..., Any]]] = {k: {} for k in KINDS}
+
+
+def register(kind: str, name: str):
+    """Register a factory for ``name`` under ``kind``.
+
+    Channel/churn factories take keyword parameters (plus the context kwarg
+    ``net`` if they need the NetworkConfig) and return a ``Process``; arrival
+    factories return the ``draw(rng, n, mean_interval)`` callable.
+    """
+    if kind not in _REGISTRIES:
+        raise ValueError(f"unknown scenario kind {kind!r}; expected one of {KINDS}")
+
+    def deco(factory):
+        _REGISTRIES[kind][name] = factory
+        return factory
+
+    return deco
+
+
+def available(kind: str) -> tuple[str, ...]:
+    if kind not in _REGISTRIES:
+        raise ValueError(f"unknown scenario kind {kind!r}; expected one of {KINDS}")
+    return tuple(sorted(_REGISTRIES[kind]))
+
+
+def get_process(kind: str, sp: str | ScenarioSpec, **context):
+    """Build the selected process, validating the spec's parameter names.
+
+    ``context`` carries simulator-provided objects (e.g. ``net``) that are
+    forwarded only to factories whose signature asks for them.  Unknown
+    process names and unknown parameters both raise a clear ValueError —
+    a typo must never be silently swallowed (same contract as
+    ``core.policy.get_policy``).
+    """
+    sp = as_spec(sp, default="")
+    reg = _REGISTRIES[kind]
+    if sp.name not in reg:
+        raise ValueError(
+            f"unknown {kind} process {sp.name!r}; available: {available(kind)}")
+    factory = reg[sp.name]
+    sig = inspect.signature(factory)
+    accepted = {
+        p.name for p in sig.parameters.values()
+        if p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                      inspect.Parameter.KEYWORD_ONLY)
+    }
+    unknown = sorted(set(sp.kwargs()) - accepted)
+    if unknown:
+        known = sorted(accepted - set(context))
+        raise ValueError(
+            f"unknown parameter(s) {unknown} for {kind} process "
+            f"{sp.name!r}; known parameters: {known}")
+    reserved = sorted(set(sp.kwargs()) & set(context))
+    if reserved:
+        raise ValueError(
+            f"parameter(s) {reserved} of {kind} process {sp.name!r} are "
+            f"supplied by the simulator and cannot be set in a spec")
+    kwargs = sp.kwargs()
+    for key, value in context.items():
+        if key in accepted:
+            kwargs[key] = value
+    return factory(**kwargs)

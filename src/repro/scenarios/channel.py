@@ -1,0 +1,141 @@
+"""Channel scenario processes: how per-period wireless state evolves.
+
+The paper's §VI setup redraws every channel i.i.d. each period; these
+processes add the temporally-correlated alternatives that stress exactly the
+claims the paper makes about robustness to channel heterogeneity (Figs.
+13-14).  All of them rebuild the period's ``ServiceSet`` through
+``network.sample_services`` on the *same* per-period key the i.i.d. path
+uses, so non-channel draws (model sizes, powers, compute times) are
+untouched and a correlation-free configuration degenerates to the i.i.d.
+engine bitwise:
+
+* ``iid`` -- the identity process (state ``()``): keeps the period's base
+  sample, i.e. today's behavior.
+* ``gauss_markov`` -- AR(1) Gauss-Markov shadowing on the path-loss standard
+  normals: z' = rho * z + sqrt(1 - rho^2) * eps with eps the very normals
+  the i.i.d. draw would have consumed (``network.channel_innovations``).
+  rho = 0 therefore reproduces the i.i.d. redraw exactly; rho -> 1 freezes
+  the shadowing for the whole episode.
+* ``rayleigh_block`` -- block-correlated Rayleigh fast fading: a complex
+  Gaussian per-client tap h with AR(1) coherence, fading margin
+  -10 log10 |h|^2 dB added on top of the (optionally also correlated)
+  shadowing.  E|h|^2 = 1, so the long-run average channel matches §VI.A.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import network
+from repro.scenarios.base import FADING_SALT, INIT_SALT, Process, register
+
+
+def _validate_rho(rho: float, name: str) -> float:
+    rho = float(rho)
+    if not 0.0 <= rho < 1.0:
+        raise ValueError(f"{name} must be in [0, 1), got {rho}")
+    return rho
+
+
+@register("channel", "iid")
+def iid():
+    """Identity: keep the period's i.i.d. base sample (paper default)."""
+
+    def init(key, n, k):
+        return ()
+
+    def step(key, state, svc):
+        return state, svc
+
+    return Process(init, step)
+
+
+def _ar1(z, eps, rho):
+    return rho * z + jnp.sqrt(1.0 - rho * rho) * eps
+
+
+def fading_margin_db(h_re, h_im, gain_floor: float) -> jax.Array:
+    """Rayleigh fading margin -10 log10 |h|^2 in dB, with deep fades clamped
+    at -10 log10(gain_floor) so an outage can never be infinitely deep."""
+    power = jnp.maximum(h_re * h_re + h_im * h_im, gain_floor)
+    return -10.0 * jnp.log10(power)
+
+
+@register("channel", "gauss_markov")
+def gauss_markov(net, rho: float = 0.95, rho_service: float | None = None):
+    """Gauss-Markov shadowing: AR(1) on the path-loss innovations.
+
+    ``rho`` correlates the per-client spread; ``rho_service`` the across-
+    service mean path loss (defaults to ``rho``).  Stationary N(0, 1) in
+    both, so every marginal period is distributed exactly like §VI.A.
+    """
+    rho_c = _validate_rho(rho, "rho")
+    rho_s = _validate_rho(rho if rho_service is None else rho_service,
+                          "rho_service")
+
+    def init(key, n, k):
+        ks, kc = jax.random.split(jax.random.fold_in(key, INIT_SALT))
+        return (jax.random.normal(ks, (n, 1)), jax.random.normal(kc, (n, k)))
+
+    def step(key, state, svc):
+        z_s, z_c = state
+        eps_s, eps_c = network.channel_innovations(key, svc.n_services, svc.k_max)
+        z_s, z_c = _ar1(z_s, eps_s, rho_s), _ar1(z_c, eps_c, rho_c)
+        svc2, _ = network.sample_services(
+            key, svc.n_services, net, k_max=svc.k_max,
+            client_counts=svc.client_counts(), channel_normals=(z_s, z_c),
+        )
+        return (z_s, z_c), svc2
+
+    return Process(init, step, rebuilds=True)
+
+
+@register("channel", "rayleigh_block")
+def rayleigh_block(net, rho: float = 0.9, shadowing_rho: float | None = None,
+                   floor_db: float = -40.0):
+    """Correlated Rayleigh fast fading on top of (optionally AR(1)) shadowing.
+
+    Per-client complex tap h with AR(1) coherence ``rho`` (h' = rho h +
+    sqrt(1-rho^2) w, w ~ CN(0, 1)); the period's path loss gains the fading
+    margin -10 log10 |h|^2 dB, clamped at ``floor_db`` so a deep fade cannot
+    produce an infinite-dB outage.  ``shadowing_rho`` additionally threads
+    the Gauss-Markov shadowing state; None keeps shadowing i.i.d.
+    """
+    rho_h = _validate_rho(rho, "rho")
+    rho_sh = None if shadowing_rho is None else _validate_rho(
+        shadowing_rho, "shadowing_rho")
+    gain_floor = 10.0 ** (float(floor_db) / 10.0)
+
+    def init(key, n, k):
+        kr, ki, ks, kc = jax.random.split(jax.random.fold_in(key, INIT_SALT), 4)
+        inv = jnp.sqrt(0.5)
+        h = (inv * jax.random.normal(kr, (n, k)),
+             inv * jax.random.normal(ki, (n, k)))
+        if rho_sh is None:
+            return h
+        return h + (jax.random.normal(ks, (n, 1)),
+                    jax.random.normal(kc, (n, k)))
+
+    def step(key, state, svc):
+        h_re, h_im = state[0], state[1]
+        kr, ki = jax.random.split(jax.random.fold_in(key, FADING_SALT))
+        inv = jnp.sqrt(0.5)
+        h_re = _ar1(h_re, inv * jax.random.normal(kr, h_re.shape), rho_h)
+        h_im = _ar1(h_im, inv * jax.random.normal(ki, h_im.shape), rho_h)
+        fade_db = fading_margin_db(h_re, h_im, gain_floor)
+        normals = None
+        state2 = (h_re, h_im)
+        if rho_sh is not None:
+            eps_s, eps_c = network.channel_innovations(
+                key, svc.n_services, svc.k_max)
+            z_s, z_c = _ar1(state[2], eps_s, rho_sh), _ar1(state[3], eps_c, rho_sh)
+            normals = (z_s, z_c)
+            state2 = state2 + (z_s, z_c)
+        svc2, _ = network.sample_services(
+            key, svc.n_services, net, k_max=svc.k_max,
+            client_counts=svc.client_counts(), channel_normals=normals,
+            extra_pathloss_db=fade_db,
+        )
+        return state2, svc2
+
+    return Process(init, step, rebuilds=True)

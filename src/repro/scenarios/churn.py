@@ -1,0 +1,94 @@
+"""Client-churn scenario processes: per-period availability of FL clients.
+
+The paper assumes every enrolled client participates in every round; these
+processes model device churn (battery, mobility, user activity) as pure mask
+perturbations on the fixed-capacity ``ServiceSet`` (``types.mask_clients``),
+so the compiled period step never retraces.  A service whose clients all
+drop for a period simply makes no FL progress that period (b = f = 0) while
+its duration keeps counting -- the realistic stall the allocation policies
+must absorb.
+
+* ``none``      -- identity (paper default).
+* ``bernoulli`` -- memoryless dropout: each client independently unavailable
+  with probability ``p_drop`` each period.
+* ``gilbert``   -- two-state Gilbert availability chain per client: an
+  available client drops with ``p_drop``, a dropped one returns with
+  ``p_return``; small ``p_return`` gives long, bursty outages at the same
+  average availability.  Steady-state availability is
+  p_return / (p_drop + p_return).
+
+Both stochastic processes accept ``always_keep``: the first that many client
+slots of every service are churn-immune (e.g. anchor devices on wall power),
+bounding worst-case stalls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import mask_clients
+from repro.scenarios.base import CHURN_SALT, Process, register
+
+
+def _validate_prob(p: float, name: str) -> float:
+    p = float(p)
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"{name} must be in [0, 1], got {p}")
+    return p
+
+
+def _keep_mask(k: int, always_keep: int):
+    return jnp.arange(k) < always_keep
+
+
+@register("churn", "none")
+def none():
+    def init(key, n, k):
+        return ()
+
+    def step(key, state, svc):
+        return state, svc
+
+    return Process(init, step)
+
+
+@register("churn", "bernoulli")
+def bernoulli(p_drop: float = 0.2, always_keep: int = 0):
+    p = _validate_prob(p_drop, "p_drop")
+    always_keep = int(always_keep)
+
+    def init(key, n, k):
+        return ()
+
+    def step(key, state, svc):
+        u = jax.random.uniform(jax.random.fold_in(key, CHURN_SALT),
+                               svc.mask.shape)
+        avail = jnp.logical_or(u >= p, _keep_mask(svc.k_max, always_keep))
+        return state, mask_clients(svc, avail)
+
+    return Process(init, step)
+
+
+@register("churn", "gilbert")
+def gilbert(p_drop: float = 0.1, p_return: float = 0.4, always_keep: int = 0):
+    p_d = _validate_prob(p_drop, "p_drop")
+    p_r = _validate_prob(p_return, "p_return")
+    always_keep = int(always_keep)
+    # Steady-state availability; the degenerate frozen chain (both probs 0)
+    # never transitions, so everyone simply stays available.
+    steady = p_r / (p_d + p_r) if (p_d + p_r) > 0.0 else 1.0
+
+    def init(key, n, k):
+        # Start at the chain's steady state so churn statistics are
+        # stationary from period 0.
+        u = jax.random.uniform(jax.random.fold_in(key, CHURN_SALT), (n, k))
+        return jnp.logical_or(u < steady, _keep_mask(k, always_keep))
+
+    def step(key, state, svc):
+        u = jax.random.uniform(jax.random.fold_in(key, CHURN_SALT),
+                               svc.mask.shape)
+        avail = jnp.where(state, u >= p_d, u < p_r)
+        avail = jnp.logical_or(avail, _keep_mask(svc.k_max, always_keep))
+        return avail, mask_clients(svc, avail)
+
+    return Process(init, step)

@@ -1,0 +1,43 @@
+"""Golden regression: run_batch summary statistics for every policy, pinned
+against checked-in JSON so allocator refactors cannot silently drift the
+Fig. 11-15 trajectory.  Durations are integers and compared exactly;
+per-period float statistics to tight tolerance (cross-platform FP).
+Regenerate deliberately with: PYTHONPATH=src python tests/golden/regen_golden.py
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.fl import simulator
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "longterm_summary.json")
+
+
+@pytest.fixture(scope="module")
+def golden() -> dict:
+    with open(GOLDEN_PATH) as fp:
+        return json.load(fp)
+
+
+def test_golden_covers_every_registered_paper_policy(golden):
+    assert set(golden["policies"]) == set(simulator.POLICIES)
+
+
+@pytest.mark.parametrize("pol", simulator.POLICIES)
+def test_run_batch_matches_golden(golden, pol):
+    cfg = simulator.SimConfig(policy=pol, **golden["config"])
+    out = simulator.run_batch(cfg, golden["seeds"])
+    exp = golden["policies"][pol]
+    np.testing.assert_array_equal(
+        np.asarray(out["durations"]), np.asarray(exp["durations"]),
+        err_msg=f"{pol}: per-service durations drifted from golden")
+    np.testing.assert_allclose(
+        out["avg_duration"], exp["avg_duration"], rtol=1e-9,
+        err_msg=f"{pol}: avg_duration drifted from golden")
+    assert [bool(x) for x in out["finished"]] == exp["finished"]
+    np.testing.assert_allclose(
+        out["history"]["freq_sum"].mean(axis=1), exp["mean_freq_sum"],
+        rtol=1e-4, err_msg=f"{pol}: mean frequency trajectory drifted")

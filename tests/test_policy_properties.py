@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) parametrized over every registered
+AllocationPolicy: the allocation is never oversubscribed and the full budget
+lands on the active rows (exactly, except the demand-limited auction, which
+clears min(B, aggregate demand)), inactive slots get exactly zero, and
+allocations are equivariant to permutations of the service rows.  Runs in CI
+(hypothesis is installed there, with a workflow step that fails the build if
+these would silently skip); deterministic spot-checks of the same invariants
+live in tests/test_policy_simulator.py so the properties are exercised even
+where hypothesis is absent."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.core import network, policy  # noqa: E402
+from repro.core.types import ServiceSet  # noqa: E402
+
+B = network.B_TOTAL_MHZ
+K = 16  # fixed client pad so every example reuses one trace cache entry
+
+
+def build_service_set(seed: int, n: int, n_inactive: int) -> ServiceSet:
+    """Random padded ServiceSet with ragged counts and n_inactive empty rows."""
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(0.01, 0.4, size=(n, K)).astype(np.float32)
+    t_comp = rng.uniform(0.01, 0.08, size=(n, K)).astype(np.float32)
+    mask = np.zeros((n, K), dtype=bool)
+    for i in range(n):
+        mask[i, : rng.integers(1, K + 1)] = True
+    for i in rng.permutation(n)[:n_inactive]:
+        mask[i] = False
+    alpha = np.where(mask, alpha, 0.0)
+    t_comp = np.where(mask, t_comp, 0.0)
+    return ServiceSet(alpha=jnp.asarray(alpha), t_comp=jnp.asarray(t_comp),
+                      mask=jnp.asarray(mask))
+
+
+def check_budget_and_inactive(name: str, svc: ServiceSet) -> None:
+    b, f = policy.allocate(name, svc, B)
+    b, f = np.asarray(b), np.asarray(f)
+    active = np.asarray(svc.service_active())
+    # inactive slots: exactly zero, not merely small
+    assert np.all(b[~active] == 0.0)
+    assert np.all(f[~active] == 0.0)
+    assert np.all(b >= 0.0) and np.all(f >= 0.0)
+    if not active.any():
+        assert b.sum() == 0.0
+        return
+    # never oversubscribed
+    assert b[active].sum() <= B * (1.0 + 1e-4)
+    if name == "selfish":
+        # the auction is demand-limited: providers take min(B, what they bid
+        # for) -- the budget clears exactly iff aggregate demand reaches B
+        from repro.core import auction
+        bid = auction.uniform_truthful_bids(svc, n_bids=5, alpha_fair=0.5)
+        max_demand = float(np.asarray(bid.demands)[active, 0].sum())
+        np.testing.assert_allclose(b[active].sum(), min(B, max_demand),
+                                   rtol=1e-3)
+    else:
+        # every other policy hands the whole budget to the active rows
+        np.testing.assert_allclose(b[active].sum(), B, rtol=1e-4)
+
+
+def check_permutation_equivariance(name: str, svc: ServiceSet,
+                                   perm: np.ndarray) -> None:
+    b, f = policy.allocate(name, svc, B)
+    svc_p = ServiceSet(alpha=svc.alpha[perm], t_comp=svc.t_comp[perm],
+                       mask=svc.mask[perm])
+    b_p, f_p = policy.allocate(name, svc_p, B)
+    np.testing.assert_allclose(np.asarray(b_p), np.asarray(b)[perm],
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_p), np.asarray(f)[perm],
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", policy.available())
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 8),
+                  n_inactive=st.integers(0, 2))
+def test_budget_on_active_rows_and_zero_on_inactive(name, seed, n, n_inactive):
+    check_budget_and_inactive(name, build_service_set(seed, n, min(n_inactive, n)))
+
+
+@pytest.mark.parametrize("name", policy.available())
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 8))
+def test_permutation_equivariance(name, seed, n):
+    svc = build_service_set(seed, n, n_inactive=1)
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    check_permutation_equivariance(name, svc, perm)
+
+
+@pytest.mark.parametrize("name", policy.available())
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_all_inactive_set_allocates_nothing(name, seed):
+    svc = build_service_set(seed, n=3, n_inactive=3)
+    check_budget_and_inactive(name, svc)

@@ -47,6 +47,45 @@ def test_unknown_policy_raises():
         policy.freq_fn("nope")
 
 
+def test_unknown_policy_option_raises():
+    """A typo'd option must raise, not silently fall back to the default."""
+    svc = _random_padded_service(0)
+    with pytest.raises(ValueError, match=r"alpha_fiar.*known options"):
+        policy.get_policy("selfish", alpha_fiar=0.7)
+    with pytest.raises(ValueError, match="unknown option"):
+        policy.allocate("coop", svc, B, iterz=12)
+    # every advertised option is still accepted
+    b, f = policy.allocate("selfish", svc, B, n_bids=4, alpha_fair=0.7,
+                           intra_backend="reference", iters=32)
+    assert np.isfinite(np.asarray(b)).all()
+
+
+@pytest.mark.parametrize("name", simulator.POLICIES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_permutation_equivariance(name, seed):
+    """Permuting service rows permutes the allocation (deterministic spot
+    check of the hypothesis property in tests/test_policy_properties.py)."""
+    svc = _random_padded_service(seed)
+    b, f = policy.allocate(name, svc, B)
+    perm = np.random.default_rng(seed + 50).permutation(svc.n_services)
+    svc_p = ServiceSet(alpha=svc.alpha[perm], t_comp=svc.t_comp[perm],
+                       mask=svc.mask[perm])
+    b_p, f_p = policy.allocate(name, svc_p, B)
+    np.testing.assert_allclose(np.asarray(b_p), np.asarray(b)[perm],
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_p), np.asarray(f)[perm],
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", simulator.POLICIES)
+def test_all_inactive_set_allocates_nothing(name):
+    svc = _random_padded_service(4)
+    none_active = jnp.zeros((svc.n_services,), dtype=bool)
+    b, f = policy.allocate(name, mask_inactive(svc, none_active), B)
+    assert float(jnp.sum(jnp.abs(b))) == 0.0
+    assert float(jnp.sum(jnp.abs(f))) == 0.0
+
+
 @pytest.mark.parametrize("name", simulator.POLICIES)
 def test_policies_feasible_and_zero_on_inactive(name):
     svc = _random_padded_service(0)
@@ -164,3 +203,30 @@ def test_batch_matches_single_seed_runs():
         single = simulator.run_scan(dataclasses.replace(base, seed=s))
         assert list(batch["durations"][i]) == single["durations"]
         assert batch["avg_duration"][i] == single["avg_duration"]
+
+
+def test_batch_episode_bitwise_identical_regardless_of_composition():
+    """The documented claim of EXPERIMENTS.md: every episode of a run_batch
+    sweep is *bitwise* identical to its own single-seed run_scan, no matter
+    which other seeds share the batch -- durations AND the float per-period
+    history, not just summary statistics."""
+    base = simulator.SimConfig(policy="es", n_services_total=3,
+                               rounds_required=100, p_arrive=2.0,
+                               max_periods=100, k_max=32)
+    b012 = simulator.run_batch(base, [0, 1, 2])
+    b1 = simulator.run_batch(base, [1])
+    b21 = simulator.run_batch(base, [2, 1])
+    single = simulator.run_scan(dataclasses.replace(base, seed=1))
+
+    for out, i in ((b012, 1), (b1, 0), (b21, 1)):
+        assert list(out["durations"][i]) == single["durations"]
+    # full-length float histories agree bitwise across batch compositions
+    for key in ("freq_sum", "objective", "n_active", "n_clients"):
+        np.testing.assert_array_equal(b012["history"][key][1],
+                                      b1["history"][key][0])
+        np.testing.assert_array_equal(b012["history"][key][1],
+                                      b21["history"][key][1])
+        # ... and match the single-seed scan over its reported periods
+        p = single["periods"]
+        np.testing.assert_array_equal(b012["history"][key][1][:p],
+                                      single["history"][key])

@@ -1,0 +1,328 @@
+"""Scenario engine tests: registry catalogue + typo rejection, the channel
+innovations refactor (bitwise), correlation->0 degenerating to the i.i.d.
+engine, AR(1) autocorrelation of the Gauss-Markov process, Rayleigh
+stationarity, churn mask perturbations, arrival samplers, and -- the
+acceptance bar -- single-trace compilation, scan/legacy/batch parity, and
+checkpoint resume with every scenario process enabled."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import network
+from repro.fl import simulator
+
+BASE = dict(policy="es", n_services_total=3, rounds_required=80,
+            p_arrive=2.0, seed=0, max_periods=100, k_max=32)
+
+FULL_STACK = dict(
+    channel_process=scenarios.spec("rayleigh_block", rho=0.9, shadowing_rho=0.8),
+    arrival_process=scenarios.spec("mmpp", burst=6.0),
+    churn_process=scenarios.spec("gilbert", p_drop=0.2, p_return=0.4,
+                                 always_keep=1),
+)
+
+
+def _cfg(**kw) -> simulator.SimConfig:
+    return simulator.SimConfig(**{**BASE, **kw})
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+def test_registries_cover_catalogue():
+    assert {"iid", "gauss_markov", "rayleigh_block"} <= set(
+        scenarios.available("channel"))
+    assert {"poisson", "periodic", "batched", "mmpp"} <= set(
+        scenarios.available("arrival"))
+    assert {"none", "bernoulli", "gilbert"} <= set(scenarios.available("churn"))
+
+
+def test_unknown_process_and_parameter_raise():
+    net = network.NetworkConfig()
+    with pytest.raises(ValueError, match="unknown channel process"):
+        scenarios.get_channel("nope", net)
+    with pytest.raises(ValueError, match="unknown parameter"):
+        scenarios.get_channel(scenarios.spec("gauss_markov", rho_typo=0.5), net)
+    with pytest.raises(ValueError, match="unknown parameter"):
+        scenarios.get_arrival(scenarios.spec("mmpp", burstiness=2.0))
+    with pytest.raises(ValueError, match="rho must be"):
+        scenarios.get_channel(scenarios.spec("gauss_markov", rho=1.5), net)
+    with pytest.raises(ValueError, match="p_drop must be"):
+        scenarios.get_churn(scenarios.spec("gilbert", p_drop=2.0), net)
+
+
+# ---------------------------------------------------------------------------
+# Channel processes.
+# ---------------------------------------------------------------------------
+
+def test_channel_innovations_match_default_sampling_bitwise():
+    """Feeding sample_services its own innovations must be a no-op: the hook
+    correlated processes rely on cannot change the i.i.d. path."""
+    net = network.NetworkConfig()
+    key = jax.random.key(42)
+    counts = np.array([5, 7, 9])
+    svc_a, _ = network.sample_services(key, 3, net, k_max=12, client_counts=counts)
+    eps = network.channel_innovations(key, 3, 12)
+    svc_b, _ = network.sample_services(key, 3, net, k_max=12, client_counts=counts,
+                                       channel_normals=eps)
+    np.testing.assert_array_equal(np.asarray(svc_a.alpha), np.asarray(svc_b.alpha))
+    np.testing.assert_array_equal(np.asarray(svc_a.t_comp), np.asarray(svc_b.t_comp))
+
+
+def test_gauss_markov_zero_correlation_reproduces_iid():
+    """Acceptance criterion: rho = 0 degenerates to today's i.i.d. redraw.
+    Durations (the headline metric) are identical; per-period float stats
+    agree to float32 fusion tolerance."""
+    base = simulator.run_scan(_cfg())
+    gm = simulator.run_scan(_cfg(
+        channel_process=scenarios.spec("gauss_markov", rho=0.0)))
+    assert gm["durations"] == base["durations"]
+    assert gm["periods"] == base["periods"]
+    np.testing.assert_allclose(gm["history"]["freq_sum"],
+                               base["history"]["freq_sum"],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_gauss_markov_step_is_bitwise_iid_at_zero_rho():
+    """Outside jit fusion, the rho = 0 process is *bitwise* the i.i.d. draw."""
+    net = network.NetworkConfig()
+    key = jax.random.key(7)
+    svc, _ = network.sample_services(key, 4, net, k_max=16,
+                                     client_counts=np.array([4, 8, 12, 16]))
+    proc = scenarios.get_channel(scenarios.spec("gauss_markov", rho=0.0), net)
+    _, svc2 = proc.step(key, proc.init(key, 4, 16), svc)
+    np.testing.assert_array_equal(np.asarray(svc.alpha), np.asarray(svc2.alpha))
+
+
+@pytest.mark.parametrize("rho,lo,hi", [(0.0, -0.3, 0.3), (0.95, 0.85, 1.0)])
+def test_gauss_markov_lag1_autocorrelation(rho, lo, hi):
+    net = network.NetworkConfig()
+    proc = scenarios.get_channel(scenarios.spec("gauss_markov", rho=rho), net)
+    key = jax.random.key(0)
+    svc, _ = network.sample_services(key, 2, net, k_max=24,
+                                     client_counts=np.array([24, 24]))
+    state = proc.init(key, 2, 24)
+    step = jax.jit(proc.step)
+    zs = []
+    for t in range(300):
+        state, _ = step(jax.random.fold_in(key, t), state, svc)
+        zs.append(np.asarray(state[1]).ravel())
+    z = np.stack(zs)
+    prev, nxt = z[:-1].ravel(), z[1:].ravel()
+    corr = np.corrcoef(prev, nxt)[0, 1]
+    assert lo < corr < hi, corr
+    # stationary N(0, 1) marginals at any rho
+    assert 0.85 < z.std() < 1.15
+
+
+def test_rayleigh_block_stationary_unit_power():
+    net = network.NetworkConfig()
+    proc = scenarios.get_channel(scenarios.spec("rayleigh_block", rho=0.9), net)
+    key = jax.random.key(3)
+    svc, _ = network.sample_services(key, 2, net, k_max=24,
+                                     client_counts=np.array([24, 24]))
+    state = proc.init(key, 2, 24)
+    step = jax.jit(proc.step)
+    powers = []
+    for t in range(300):
+        state, svc_t = step(jax.random.fold_in(key, t), state, svc)
+        powers.append(np.asarray(state[0]) ** 2 + np.asarray(state[1]) ** 2)
+    p = np.stack(powers)
+    assert 0.8 < p.mean() < 1.25          # E|h|^2 = 1
+    # fading perturbs only the channel: vs the same-key i.i.d. draw, compute
+    # times are bitwise untouched while transmission loads moved
+    key_t = jax.random.fold_in(key, 299)
+    iid_t, _ = network.sample_services(key_t, 2, net, k_max=24,
+                                       client_counts=np.array([24, 24]))
+    np.testing.assert_array_equal(np.asarray(svc_t.t_comp),
+                                  np.asarray(iid_t.t_comp))
+    assert not np.array_equal(np.asarray(svc_t.alpha), np.asarray(iid_t.alpha))
+
+
+# ---------------------------------------------------------------------------
+# Churn processes.
+# ---------------------------------------------------------------------------
+
+def test_fading_margin_clamps_deep_fades():
+    """A tap below the gain floor applies exactly the -floor_db margin; a
+    healthy tap applies its true -10 log10 |h|^2."""
+    from repro.scenarios.channel import fading_margin_db
+    floor = 10.0 ** (-40.0 / 10.0)
+    deep = float(fading_margin_db(np.float32(1e-6), np.float32(0.0), floor))
+    np.testing.assert_allclose(deep, 40.0, rtol=1e-6)
+    healthy = float(fading_margin_db(np.float32(0.6), np.float32(0.8), floor))
+    np.testing.assert_allclose(healthy, 0.0, atol=1e-5)   # |h|^2 = 1
+
+
+def test_bernoulli_churn_masks_clients_and_respects_always_keep():
+    net = network.NetworkConfig()
+    key = jax.random.key(5)
+    counts = np.array([6, 10, 14])
+    svc, _ = network.sample_services(key, 3, net, k_max=16, client_counts=counts)
+    proc = scenarios.get_churn(
+        scenarios.spec("bernoulli", p_drop=1.0, always_keep=2), net)
+    _, svc2 = proc.step(key, proc.init(key, 3, 16), svc)
+    np.testing.assert_array_equal(np.asarray(svc2.client_counts()), [2, 2, 2])
+    # dropped clients look exactly like padding
+    assert float(np.asarray(svc2.alpha)[~np.asarray(svc2.mask)].max()) == 0.0
+
+
+def test_total_churn_stalls_episode():
+    """p_drop = 1 with no anchors: every service is an empty row forever --
+    no FL progress, nothing finishes."""
+    out = simulator.run_scan(_cfg(
+        churn_process=scenarios.spec("bernoulli", p_drop=1.0), max_periods=30))
+    assert not out["finished"]
+    assert float(np.abs(out["history"]["freq_sum"]).max()) == 0.0
+
+
+def test_gilbert_frozen_chain_drops_no_one():
+    """Degenerate pair p_drop = p_return = 0: the chain never transitions,
+    so a zero drop probability must mean full availability forever."""
+    net = network.NetworkConfig()
+    proc = scenarios.get_churn(
+        scenarios.spec("gilbert", p_drop=0.0, p_return=0.0), net)
+    key = jax.random.key(9)
+    svc, _ = network.sample_services(key, 2, net, k_max=8,
+                                     client_counts=np.array([8, 8]))
+    state = proc.init(key, 2, 8)
+    assert bool(np.all(np.asarray(state)))
+    for t in range(3):
+        state, svc2 = proc.step(jax.random.fold_in(key, t), state, svc)
+        np.testing.assert_array_equal(np.asarray(svc2.client_counts()), [8, 8])
+
+
+def test_gilbert_steady_state_availability():
+    net = network.NetworkConfig()
+    proc = scenarios.get_churn(
+        scenarios.spec("gilbert", p_drop=0.2, p_return=0.2), net)
+    key = jax.random.key(11)
+    svc, _ = network.sample_services(key, 2, net, k_max=20,
+                                     client_counts=np.array([20, 20]))
+    state = proc.init(key, 2, 20)
+    step = jax.jit(proc.step)
+    avail = []
+    for t in range(200):
+        state, _ = step(jax.random.fold_in(key, t), state, svc)
+        avail.append(np.asarray(state).mean())
+    # steady state = p_return / (p_drop + p_return) = 0.5
+    assert 0.4 < np.mean(avail) < 0.6
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["poisson", "periodic", "batched", "mmpp"])
+def test_arrival_samplers_are_sane(name):
+    draw = scenarios.get_arrival(name)
+    rng = np.random.default_rng(0)
+    arr = draw(rng, 50, 4.0)
+    assert arr.shape == (50,) and arr.dtype == np.int64
+    assert np.all(arr >= 0) and np.all(np.diff(arr) >= 0)
+
+
+def test_poisson_arrivals_match_pre_scenario_stream():
+    """The default sampler consumes the exact RNG stream of the pre-scenario
+    engine, keeping every seed's episode reproducible across the refactor."""
+    draw = scenarios.get_arrival("poisson")
+    arr = draw(np.random.default_rng(3), 10, 5.0)
+    rng = np.random.default_rng(3)
+    expected = np.floor(np.cumsum(rng.exponential(5.0, size=10))).astype(np.int64)
+    np.testing.assert_array_equal(arr, expected)
+
+
+def test_periodic_and_batched_arrivals_structure():
+    assert list(scenarios.get_arrival("periodic")(
+        np.random.default_rng(0), 4, 2.5)) == [0, 2, 5, 7]
+    arr = scenarios.get_arrival(scenarios.spec("batched", group=3))(
+        np.random.default_rng(0), 7, 2.0)
+    assert arr[0] == arr[1] == arr[2] and arr[3] == arr[4] == arr[5]
+
+
+def test_mmpp_is_burstier_than_poisson():
+    """Squared coefficient of variation of inter-arrival gaps: ~1 for the
+    Poisson process, clearly above 1 for the 2-state MMPP."""
+    def cv2(name_or_spec, seed=0, n=4000):
+        rng = np.random.default_rng(seed)
+        draw = scenarios.get_arrival(name_or_spec)
+        gaps = np.diff(draw(rng, n, 10.0).astype(np.float64))
+        return gaps.var() / gaps.mean() ** 2
+
+    assert cv2("poisson") < 1.3
+    assert cv2(scenarios.spec("mmpp", burst=8.0, stay=0.9)) > 1.6
+
+
+# ---------------------------------------------------------------------------
+# The engine with every scenario process enabled (acceptance criteria).
+# ---------------------------------------------------------------------------
+
+def test_full_stack_single_trace_and_one_compiled_batch():
+    simulator.reset_trace_count()
+    out = simulator.run_scan(_cfg(**FULL_STACK))
+    assert out["finished"]
+    assert simulator.trace_count() == 1
+    # run_batch stays one compiled call: the period step is NOT retraced for
+    # the batched entry of the same shape+scenario, and each lane is bitwise
+    # its own single-seed episode.
+    simulator.reset_trace_count()
+    batch = simulator.run_batch(_cfg(**FULL_STACK), [0, 1])
+    assert simulator.trace_count() == 1
+    single = simulator.run_scan(_cfg(**FULL_STACK, seed=1))
+    assert list(batch["durations"][1]) == single["durations"]
+
+
+def test_full_stack_scan_matches_legacy_loop():
+    scan = simulator.run_scan(_cfg(**FULL_STACK))
+    legacy = simulator.run(_cfg(**FULL_STACK))
+    assert scan["durations"] == legacy["durations"]
+    assert scan["periods"] == legacy["periods"]
+    assert scan["finished"] == legacy["finished"]
+
+
+def test_full_stack_checkpoint_resume(tmp_path):
+    """Scenario state (fading taps, shadowing, churn chains) survives the
+    legacy engine's JSON snapshot: resuming mid-episode is exact."""
+    cfg = _cfg(**FULL_STACK)
+    partial = simulator.run(dataclasses.replace(cfg, max_periods=3),
+                            checkpoint_path=str(tmp_path / "snap.json"))
+    assert not partial["finished"]
+    resumed = simulator.run(cfg, state=partial["state"])
+    fresh = simulator.run(cfg)
+    assert resumed["durations"] == fresh["durations"]
+    assert resumed["periods"] == fresh["periods"]
+
+
+def test_resume_without_scenario_state_is_rejected():
+    """A mid-episode snapshot that predates the configured stateful scenario
+    must not silently reinitialize its state at the resume period."""
+    cfg = _cfg(**FULL_STACK)
+    partial = simulator.run(dataclasses.replace(cfg, max_periods=3))
+    legacy_snapshot = {k: v for k, v in partial["state"].items()
+                       if k not in ("chan_state", "churn_state")}
+    with pytest.raises(ValueError, match="stateful"):
+        simulator.run(cfg, state=legacy_snapshot)
+    # ...but a period-0 snapshot without the keys resumes fine (fresh init
+    # IS the correct state before the first step)
+    fresh0 = {"period": 0, "rounds_done": [0] * 3, "duration": [0] * 3,
+              "history": []}
+    out = simulator.run(cfg, state=fresh0)
+    assert out["durations"] == simulator.run(cfg)["durations"]
+
+
+def test_scenario_fields_participate_in_jit_statics():
+    """Different scenario specs are different compilation keys, same spec is
+    a cache hit -- the registry mirrors core.policy's string-keyed dispatch."""
+    cfg = _cfg(churn_process=scenarios.spec("bernoulli", p_drop=0.1))
+    simulator.reset_trace_count()
+    simulator.run_scan(cfg)
+    assert simulator.trace_count() == 1
+    simulator.run_scan(cfg)                      # same spec: no retrace
+    assert simulator.trace_count() == 1
+    simulator.run_scan(_cfg(churn_process=scenarios.spec(
+        "bernoulli", p_drop=0.3)))               # new params: one new trace
+    assert simulator.trace_count() == 2

@@ -8,7 +8,16 @@ Compares, on REAL CPU wall-clock:
   * beyond-paper-bisect: direct market clearing on the monotone aggregate
     demand (48 fixed trips);
   * beyond-paper-newton: damped Newton with the closed-form demand slope
-    (quadratic convergence, <= 12 trips).
+    (quadratic convergence, <= 12 trips);
+  * beyond-paper-warm: the warm-started safeguarded Newton
+    (solve_lambda_newton_warm, <= 6 fused demand+slope evaluations seeded
+    from the previous period's dual price -- the multi-period fast path);
+  * auction charge computation: leave-one-out clearing reruns (O(N^2 M
+    log NM)) vs the closed-form prefix-sum path (O(NM log NM)).
+
+The repo-root ``BENCH_allocation.json`` trajectory is produced by the
+dedicated ``benchmarks/bench_allocation.py``; the rows here fold the same
+comparisons into the full allocator study.
 
 The Pallas bisect_alloc kernel is the TPU deployment of the inner solve; on
 this CPU host it is validated in interpret mode (tests/test_kernels.py) and
@@ -64,19 +73,25 @@ def run() -> list[dict]:
     rows.append(common.row("scale/vectorized_N8", us_vec,
                            f"speedup={t_seq / us_vec:.1f}x"))
 
-    # ---- fleet scale: vectorized subgradient vs bisect vs newton
+    # ---- fleet scale: vectorized subgradient vs bisect vs newton vs warm
     for n in (100, 1_000, 10_000):
         svc, _ = network.sample_services(jax.random.key(2), n, k_max=32)
+        lam_prev = disba.solve_lambda_bisect(svc, B).lam * jnp.float32(1.03)
         us_sub = common.time_fn(lambda s=svc: disba.disba(s, B, gamma=0.1),
                                 iters=3)
         us_bis = common.time_fn(lambda s=svc: disba.solve_lambda_bisect(s, B),
                                 iters=3)
         us_new = common.time_fn(lambda s=svc: disba.solve_lambda_newton(s, B),
                                 iters=3)
-        # cross-check all three agree
+        us_warm = common.time_fn(
+            lambda s=svc: disba.solve_lambda_newton_warm(s, B, lam_prev),
+            iters=3)
+        # cross-check they all agree
         b1 = disba.solve_lambda_bisect(svc, B).b
         b2 = disba.solve_lambda_newton(svc, B).b
+        b3 = disba.solve_lambda_newton_warm(svc, B, lam_prev).b
         dev = float(jnp.max(jnp.abs(b1 - b2)))
+        dev_warm = float(jnp.max(jnp.abs(b1 - b3)))
         rows.append(common.row(f"scale/subgradient_N{n}", us_sub,
                                f"us_per_service={us_sub / n:.2f}"))
         rows.append(common.row(f"scale/bisect_N{n}", us_bis,
@@ -84,6 +99,30 @@ def run() -> list[dict]:
         rows.append(common.row(f"scale/newton_N{n}", us_new,
                                f"us_per_service={us_new / n:.2f} "
                                f"max_dev_vs_bisect={dev:.2e}"))
+        rows.append(common.row(f"scale/warm_newton_N{n}", us_warm,
+                               f"us_per_service={us_warm / n:.2f} "
+                               f"speedup_vs_bisect={us_bis / us_warm:.1f}x "
+                               f"max_dev_vs_bisect={dev_warm:.2e}"))
+
+    # ---- auction charge computation: leave-one-out rerun vs prefix sums
+    from repro.core import auction
+    for n in (64, 256):
+        svc_a, _ = network.sample_services(jax.random.key(4), n, k_max=16)
+        bid = auction.uniform_truthful_bids(svc_a, 5, 0.5)
+        b_a, _ = auction.allocate(bid, B)
+        rerun = jax.jit(lambda s, bd, bb: auction.charges(
+            s, bd, bb, B, 0.5, method="rerun"))
+        prefix = jax.jit(lambda s, bd, bb: auction.charges(
+            s, bd, bb, B, 0.5, method="prefix"))
+        dev_c = float(jnp.max(jnp.abs(rerun(svc_a, bid, b_a)
+                                      - prefix(svc_a, bid, b_a))))
+        us_rerun = common.time_fn(lambda: rerun(svc_a, bid, b_a), iters=3)
+        us_prefix = common.time_fn(lambda: prefix(svc_a, bid, b_a), iters=3)
+        rows.append(common.row(f"auction/charges_rerun_N{n}", us_rerun, ""))
+        rows.append(common.row(
+            f"auction/charges_prefix_N{n}", us_prefix,
+            f"speedup_vs_rerun={us_rerun / us_prefix:.1f}x "
+            f"max_dev={dev_c:.2e}"))
 
     # ---- intra-service solve throughput (the Pallas kernel's workload)
     svc, _ = network.sample_services(jax.random.key(3), 10_000, k_max=32)
@@ -107,13 +146,14 @@ def run() -> list[dict]:
         p_arrive=1.0, max_periods=64, k_max=32, seed=0,
     )
     us_scan = common.time_fn(lambda: simulator.run_scan(sim_cfg), iters=3)
-    simulator.run(sim_cfg)                      # warm the step's jit cache
-    t0 = time.perf_counter()
-    simulator.run(sim_cfg)
-    us_legacy = (time.perf_counter() - t0) * 1e6
+    # Same median-of-iters discipline as every other row: a single
+    # un-medianed run would commit host noise straight into the artifact.
+    us_legacy = common.time_fn(lambda: simulator.run(sim_cfg), iters=3)
     rows.append(common.row("sim/scan_64periods", us_scan,
                            f"us_per_period={us_scan / 64:.1f} "
-                           f"speedup_vs_loop={us_legacy / us_scan:.1f}x"))
+                           f"speedup_vs_loop={us_legacy / us_scan:.1f}x "
+                           f"(scan runs all 64 periods; loop skips inactive "
+                           f"ones and exits at completion)"))
     rows.append(common.row("sim/python_loop_64periods", us_legacy, ""))
 
     # ---- scenario sweep: the same compiled episode vmapped over 16 seeds

@@ -15,7 +15,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: tables,static,longterm,scale,roofline")
+                    help="comma list: tables,static,longterm,scale,"
+                         "allocation,roofline")
     ap.add_argument("--full", action="store_true",
                     help="paper-sized long-term sims (slow)")
     args = ap.parse_args()
@@ -36,13 +37,15 @@ def main() -> None:
             print(f"{name}/FAILED,,{traceback.format_exc().splitlines()[-1]}",
                   flush=True)
 
-    from benchmarks import (allocator_scale, paper_figs_longterm,
-                            paper_figs_static, paper_tables, roofline)
+    from benchmarks import (allocator_scale, bench_allocation,
+                            paper_figs_longterm, paper_figs_static,
+                            paper_tables, roofline)
 
     section("tables", paper_tables.run)
     section("static", paper_figs_static.run)
     section("longterm", lambda: paper_figs_longterm.run(full=args.full))
     section("scale", allocator_scale.run)
+    section("allocation", lambda: bench_allocation.run_rows(tiny=not args.full))
     section("roofline", roofline.run)
     if failures:
         sys.exit(1)

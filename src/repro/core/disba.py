@@ -128,6 +128,14 @@ def disba(
     )
 
 
+# Module-level jitted entry points for the Python-loop tracer.  Keyed on the
+# (shape, dtype, static iters) signature by jax.jit's cache, so repeated
+# ``disba_trace`` calls reuse one compilation instead of rebuilding a fresh
+# ``jax.jit(lambda ...)`` wrapper (and recompiling) per invocation.
+_TRACE_DEMAND = jax.jit(intra.demand, static_argnames=("iters",))
+_TRACE_FREQ = jax.jit(intra.freq, static_argnames=("iters",))
+
+
 def disba_trace(
     svc: ServiceSet,
     total_bandwidth: float,
@@ -141,8 +149,8 @@ def disba_trace(
     (Figs. 4-5, Table II).  Same normalized update as ``disba``."""
     lam_scale = float(jnp.max(intra.p_max(svc)))
     lam = 0.5 * lam_scale if lam0 is None else float(lam0)
-    demand_fn = jax.jit(lambda l: intra.demand(svc, l))
-    freq_fn = jax.jit(lambda b: intra.freq(svc, b))
+    demand_fn = functools.partial(_TRACE_DEMAND, svc)
+    freq_fn = functools.partial(_TRACE_FREQ, svc)
     hist = {"lam": [], "b": [], "f": [], "demand_gap": []}
     j = 0
     converged = False
@@ -202,49 +210,141 @@ def solve_lambda_bisect(
     )
 
 
-def _demand_and_slope(svc: ServiceSet, lam, inner_iters: int):
-    """(D(lam), dD/dlam) in closed form.
+def demand_slope_values(svc: ServiceSet, lam, inner_iters: int = BISECT_ITERS):
+    """Per-service (b(lam), db/dlam) in closed form -- the single home of the
+    slope formula (the Pallas ``dual_demand`` kernel's in-VMEM copy is the
+    only other implementation, and its oracle ``ref.dual_demand_ref``
+    delegates here).
 
-    From Eq. 13, lam = psi(f) = f'(f)/(1+f); db/dlam = b'(f)/psi'(f) with
-    b'(f) = 1/f'(f)  (Eq. 8) and
-    psi'(f) = (f''*(1+f) - f'^2) / (1+f)^2, all closed-form at f (Eqns. 9-10).
+    From Eq. 13, lam = psi(f) = f'(b(f))/(1+f); db/dlam = b'(f)/psi'(f) with
+    b'(f) = 1/f'(b)  (Eq. 8) and, via the chain rule d(f')/df = f''*b'(f) =
+    f''/f',
+    psi'(f) = (f''*(1+f)/f' - f') / (1+f)^2, all closed-form at f (Eqns. 9-10).
     Opted-out providers (f = 0 because lam >= p_max) contribute zero slope.
     """
     f = intra.freq_from_price(svc, lam, inner_iters)
     b = intra.bandwidth_from_freq(svc, f)
-    fp = intra.freq_prime_at_f(svc, f)
+    fp = jnp.maximum(intra.freq_prime_at_f(svc, f), _TINY)
     fpp = intra.freq_second_at_f(svc, f)
-    psi_p = (fpp * (1.0 + f) - fp**2) / (1.0 + f) ** 2
+    psi_p = (fpp * (1.0 + f) / fp - fp) / (1.0 + f) ** 2
     slope = jnp.where(f > 0.0, (1.0 / fp) / psi_p, 0.0)
+    return b, slope
+
+
+def _demand_and_slope(svc: ServiceSet, lam, inner_iters: int):
+    """(D(lam), dD/dlam, b(lam)) -- the aggregates a dual iteration needs."""
+    b, slope = demand_slope_values(svc, lam, inner_iters)
     return jnp.sum(b), jnp.sum(slope), b
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "inner_iters"))
 def solve_lambda_newton(
     svc: ServiceSet,
     total_bandwidth: float,
     iters: int = 12,
     inner_iters: int = BISECT_ITERS,
 ) -> DisbaResult:
-    """Damped Newton on D(lam) - B = 0 with bisection safeguarding."""
+    """Damped Newton on D(lam) - B = 0 with bisection safeguarding.
+
+    The cold special case of ``solve_lambda_newton_warm``: midpoint seed
+    (the ``WARM_COLD`` sentinel) and the full ``inner_iters`` trip count
+    inside every Newton iteration.  One loop body serves both solvers.
+    """
+    return solve_lambda_newton_warm(
+        svc, total_bandwidth, WARM_COLD, iters=iters,
+        inner_iters=inner_iters, newton_inner_iters=inner_iters,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Warm-started market clearing: the fast path of the multi-period simulator.
+# ---------------------------------------------------------------------------
+
+WARM_COLD = -1.0   # dual-price sentinel meaning "no previous solve to reuse"
+WARM_ITERS = 6     # safeguarded-Newton trips from a warm seed (quadratic
+                   # convergence: <= 6 reach float32 resolution when the
+                   # service population changed slowly since the last period)
+WARM_INNER_ITERS = 24  # inner price->frequency trips *inside* the Newton
+                       # loop: 24 halvings put the bracket at ~6e-8 of its
+                       # width, at float32 resolution already -- the final
+                       # demand/frequency evaluations still run the full
+                       # ``inner_iters`` so the returned allocation is
+                       # exact-to-dtype like every other solver here
+
+DEMAND_BACKENDS = ("reference", "pallas")
+
+
+def _demand_slope_backend(svc: ServiceSet, lam, inner_iters: int, backend: str):
+    """(D(lam), dD/dlam, b(lam)) through the selected demand backend.
+
+    ``"reference"`` is the pure-jnp closed form (``_demand_and_slope``);
+    ``"pallas"`` launches the fused ``dual_demand`` kernel: one launch solves
+    the Eq. 14 price->frequency bisection for the whole tile in VMEM and
+    emits demand and its closed-form slope together, so each dual iteration
+    is a single kernel call instead of ~48 jnp array sweeps.
+    """
+    if backend == "reference":
+        return _demand_and_slope(svc, lam, inner_iters)
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        b, slope = ops.dual_demand(svc.alpha, svc.t_comp, lam,
+                                   use_pallas=True, iters=inner_iters)
+        return jnp.sum(b), jnp.sum(slope), b
+    raise ValueError(f"unknown demand backend {backend!r}; "
+                     f"expected one of {DEMAND_BACKENDS}")
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "inner_iters",
+                                             "newton_inner_iters", "backend"))
+def solve_lambda_newton_warm(
+    svc: ServiceSet,
+    total_bandwidth: float,
+    lam_prev: jax.Array | float = WARM_COLD,
+    iters: int = WARM_ITERS,
+    inner_iters: int = BISECT_ITERS,
+    newton_inner_iters: int = WARM_INNER_ITERS,
+    backend: str = "reference",
+) -> DisbaResult:
+    """Safeguarded Newton on D(lam) - B = 0, seeded from the previous solve.
+
+    The periodic re-solve of the long-term simulation changes the service
+    population slowly, so the previous period's dual optimum ``lam_prev`` is
+    an excellent seed: Newton's quadratic local convergence then clears the
+    market in <= ``WARM_ITERS`` trips where the cold bisection pays
+    ``BISECT_ITERS`` (48).  The bracket [0, max_n p_max] (recomputed for the
+    *current* set, where the dual optimum provably lies) safeguards every
+    step, so a badly stale seed degrades to plain safeguarded Newton, never
+    diverges.  ``lam_prev <= 0`` (e.g. the ``WARM_COLD`` sentinel) or a seed
+    at/above the bracket top falls back to the cold midpoint seed.
+    """
     b_total = jnp.asarray(total_bandwidth, dtype=jnp.float32)
+    lam_prev = jnp.asarray(lam_prev, dtype=jnp.float32)
     lam_hi0 = jnp.max(intra.p_max(svc))
+    warm_ok = jnp.logical_and(lam_prev > 0.0, lam_prev < lam_hi0)
+    lam0 = jnp.where(warm_ok, lam_prev, 0.5 * lam_hi0)
 
     def body(_, state):
         lam, lo, hi = state
-        d, slope, _ = _demand_and_slope(svc, lam, inner_iters)
+        d, slope, _ = _demand_slope_backend(svc, lam, newton_inner_iters,
+                                            backend)
         resid = d - b_total
         lo = jnp.where(resid > 0, lam, lo)   # demand too high -> raise price
         hi = jnp.where(resid > 0, hi, lam)
         step = resid / jnp.where(jnp.abs(slope) > _TINY, slope, -_TINY)
         lam_newton = lam - step
-        in_bracket = jnp.logical_and(lam_newton > lo, lam_newton < hi)
+        # Non-strict bounds: a converged float32 iterate reproduces itself
+        # (lam_newton == lam == the endpoint just folded into the bracket);
+        # strict bounds would bounce it to the midpoint.
+        in_bracket = jnp.logical_and(lam_newton >= lo, lam_newton <= hi)
         lam_next = jnp.where(in_bracket, lam_newton, 0.5 * (lo + hi))
         return lam_next, lo, hi
 
-    lam0 = 0.5 * lam_hi0
-    lam, _, _ = jax.lax.fori_loop(0, iters, body, (lam0, jnp.zeros_like(lam_hi0), lam_hi0))
-    b = intra.demand(svc, lam, inner_iters)
+    lam, _, _ = jax.lax.fori_loop(
+        0, iters, body, (lam0, jnp.zeros_like(lam_hi0), lam_hi0))
+    if backend == "reference":
+        b = intra.demand(svc, lam, inner_iters)
+    else:
+        _, _, b = _demand_slope_backend(svc, lam, inner_iters, backend)
     b = b * (b_total / jnp.maximum(jnp.sum(b), _TINY))
     return DisbaResult(
         b=b, f=intra.freq(svc, b, inner_iters), lam=lam,

@@ -67,6 +67,29 @@ def mbdf(
     return intra.bandwidth_from_freq(svc, f_star)
 
 
+def mbdf_grid(
+    svc: ServiceSet,
+    prices: jax.Array,
+    alpha_fair: float,
+    iters: int = BISECT_ITERS,
+) -> jax.Array:
+    """Modified bandwidth demand at a whole (N, M) price grid in ONE joint
+    bisection: the grid is flattened to an (N*M)-row replicated ServiceSet
+    and handed to the scalar-price ``mbdf`` itself -- a single ``fori_loop``
+    over the joint bracket instead of a vmap of M per-column solves, with
+    the mMVF arithmetic keeping exactly one home.  Per element the ops are
+    identical to the vmapped path, so the result matches it bitwise.
+    """
+    prices = jnp.asarray(prices, dtype=svc.alpha.dtype)          # (N, M)
+    n, m = prices.shape
+    rep = ServiceSet(
+        alpha=jnp.repeat(svc.alpha, m, axis=0),
+        t_comp=jnp.repeat(svc.t_comp, m, axis=0),
+        mask=jnp.repeat(svc.mask, m, axis=0),
+    )
+    return mbdf(rep, prices.reshape(-1), alpha_fair, iters).reshape(n, m)
+
+
 class ClearingResult(NamedTuple):
     b: jax.Array      # (N,) allocation
     f: jax.Array      # (N,) resulting frequencies

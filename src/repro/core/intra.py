@@ -62,12 +62,17 @@ def solve_round_time(svc: ServiceSet, b: jax.Array, iters: int = BISECT_ITERS) -
     safe_b = jnp.maximum(b, _TINY)
     u_hi = a_sum / safe_b
 
+    # Loop-invariant masking, hoisted out of the bisection body: alpha is
+    # exactly 0 at masked slots (0 / positive = 0 contributes nothing), and
+    # the masked gap is set to 1 (any positive value) so the denominator
+    # never needs a per-trip ``where``.  Each of the ``iters`` trips is then
+    # a single fused multiply-sum over the (N, K) tile.
+    alpha_m = jnp.where(svc.mask, svc.alpha, 0.0)
     # Gap of each client's pole below the slowest client's pole (>= 0).
-    gap = jnp.where(svc.mask, t_cmax[:, None] - svc.t_comp, jnp.inf)  # (N, K)
+    gap = jnp.where(svc.mask, t_cmax[:, None] - svc.t_comp, 1.0)  # (N, K)
 
     def h(u):  # u: (N,)
-        denom = u[:, None] + gap
-        return jnp.sum(jnp.where(svc.mask, svc.alpha / denom, 0.0), axis=-1) - b
+        return jnp.sum(alpha_m / (u[:, None] + gap), axis=-1) - b
 
     u_star = _bisect(h, jnp.zeros_like(u_hi), u_hi, iters)
     t_star = t_cmax + u_star
@@ -156,9 +161,13 @@ def freq_from_price(svc: ServiceSet, lam: jax.Array, iters: int = BISECT_ITERS) 
     f_hi = f_max(svc) * _F_CEIL
     target = 1.0 / jnp.maximum(lam, _TINY)
 
+    # Hoisted loop-invariant masking: alpha_m is exactly 0 at masked slots, so
+    # they contribute 0 to the sum without a per-trip ``where``.
+    alpha_m = jnp.where(svc.mask, svc.alpha, 0.0)
+
     def h(f):  # decreasing convention: target - LHS(f)
         one_m = jnp.maximum(1.0 - svc.t_comp * f[:, None], _TINY)
-        lhs = (1.0 + f) * _masked_sum(svc, svc.alpha / one_m**2)
+        lhs = (1.0 + f) * jnp.sum(alpha_m / one_m**2, axis=-1)
         return target - lhs
 
     f_star = _bisect(h, jnp.zeros_like(f_hi), f_hi, iters)

@@ -91,6 +91,14 @@ class SimConfig:
     seed: int = 0
     intra_backend: str = "reference"   # "reference" | "pallas"
     k_max: int | None = None           # client-capacity pad; None -> derived
+    # Warm-start the allocation across periods: policy solver state (e.g.
+    # coop's dual price) rides in the scan carry and seeds the next period's
+    # solve.  Off by default -- the cold path is pinned by the goldens.
+    warm_start: bool = False
+    # When False the scan emits no per-period stacked history -- only scalar
+    # aggregates accumulated in the carry -- cutting HBM traffic and host
+    # transfer for large run_batch sweeps.
+    collect_history: bool = True
     # Scenario processes: registry keys or scenarios.spec(name, **params).
     channel_process: str | scenarios.ScenarioSpec = "iid"
     arrival_process: str | scenarios.ScenarioSpec = "poisson"
@@ -139,14 +147,15 @@ def _static_draws(cfg: SimConfig, net: network.NetworkConfig) -> tuple[np.ndarra
 # The shared per-period step (one trace serves every period of every episode).
 # ---------------------------------------------------------------------------
 
-def _period_step(rounds_done, duration, chan_state, churn_state, period,
-                 arrivals, counts, key, *, policy_fn, chan_step, churn_step,
-                 chan_rebuilds: bool, net, n_total: int, k_max: int,
-                 rounds_required: int):
+def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
+                 period, arrivals, counts, key, *, policy_fn, chan_step,
+                 churn_step, chan_rebuilds: bool, net, n_total: int,
+                 k_max: int, rounds_required: int):
     """One period: evolve channels and churn, flip activity masks, allocate.
 
     All shapes are fixed at (n_total, k_max); activity and churn are pure
-    masking and the scenario processes carry fixed-shape state, so the scan
+    masking, and the scenario processes *and* the policy solver (``pol_state``,
+    e.g. the warm-start dual price) carry fixed-shape state, so the scan
     engine traces this exactly once per (episode shape, scenario) combo.
     """
     _TRACE_COUNTS["allocation_step"] += 1
@@ -167,7 +176,7 @@ def _period_step(rounds_done, duration, chan_state, churn_state, period,
     churn_state, svc_full = churn_step(key_p, churn_state, svc_full)
     active = jnp.logical_and(arrivals <= period, rounds_done < rounds_required)
     svc = mask_inactive(svc_full, active)
-    b, f = policy_fn(svc, net.total_bandwidth_mhz)
+    b, f, pol_state = policy_fn(svc, net.total_bandwidth_mhz, pol_state)
     rounds = jnp.maximum(
         jnp.floor(f * jnp.float32(net.period_s)), 0.0
     ).astype(jnp.int32)
@@ -182,43 +191,65 @@ def _period_step(rounds_done, duration, chan_state, churn_state, period,
         "n_clients": jnp.sum(svc.mask.astype(jnp.int32)),
         "all_done": jnp.all(rounds_done >= rounds_required),
     }
-    return rounds_done, duration, chan_state, churn_state, stats
+    return rounds_done, duration, chan_state, churn_state, pol_state, stats
 
 
 _EPISODE_STATICS = ("policy", "net", "n_total", "k_max", "rounds_required",
                     "max_periods", "n_bids", "alpha_fair", "intra_backend",
-                    "channel", "churn")
+                    "warm_start", "collect_history", "channel", "churn")
+
+_AGG_KEYS = ("freq_sum", "objective", "n_active", "n_clients")
 
 
 def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
                   rounds_required, max_periods, n_bids, alpha_fair,
-                  intra_backend, channel, churn):
-    policy_fn = policy_mod.get_policy(
-        policy, n_bids=n_bids, alpha_fair=alpha_fair,
+                  intra_backend, warm_start, collect_history, channel, churn):
+    pol = policy_mod.get_stateful_policy(
+        policy, warm_start=warm_start, n_bids=n_bids, alpha_fair=alpha_fair,
         intra_backend=intra_backend,
     )
     chan_proc = scenarios.get_channel(channel, net)
     churn_proc = scenarios.get_churn(churn, net)
 
     def step(carry, period):
-        rounds_done, duration, chan_state, churn_state = carry
-        rounds_done, duration, chan_state, churn_state, stats = _period_step(
-            rounds_done, duration, chan_state, churn_state, period,
+        rounds_done, duration, chan_state, churn_state, pol_state, agg = carry
+        (rounds_done, duration, chan_state, churn_state, pol_state,
+         stats) = _period_step(
+            rounds_done, duration, chan_state, churn_state, pol_state, period,
             arrivals, counts, key,
-            policy_fn=policy_fn, chan_step=chan_proc.step,
+            policy_fn=pol.step, chan_step=chan_proc.step,
             churn_step=churn_proc.step, chan_rebuilds=chan_proc.rebuilds,
             net=net, n_total=n_total, k_max=k_max,
             rounds_required=rounds_required,
         )
-        return (rounds_done, duration, chan_state, churn_state), stats
+        carry = (rounds_done, duration, chan_state, churn_state, pol_state)
+        if collect_history:
+            return carry + ((),), stats
+        # Aggregate-only mode: fold the per-period stats into the carry over
+        # the first ``periods`` periods (up to and including the one where
+        # every service finishes -- the same window _summarize slices).
+        live = jnp.logical_not(agg["done"])
+        agg = {
+            "done": jnp.logical_or(agg["done"], stats["all_done"]),
+            "periods": agg["periods"] + live.astype(jnp.int32),
+            **{k: agg[k] + jnp.where(live, stats[k], 0).astype(agg[k].dtype)
+               for k in _AGG_KEYS},
+        }
+        return carry + (agg,), None
 
+    agg0 = () if collect_history else {
+        "done": jnp.bool_(False), "periods": jnp.int32(0),
+        "freq_sum": jnp.float32(0), "objective": jnp.float32(0),
+        "n_active": jnp.int32(0), "n_clients": jnp.int32(0),
+    }
     init = (jnp.zeros((n_total,), jnp.int32), jnp.zeros((n_total,), jnp.int32),
             chan_proc.init(key, n_total, k_max),
-            churn_proc.init(key, n_total, k_max))
-    (rounds_done, duration, _, _), hist = jax.lax.scan(
+            churn_proc.init(key, n_total, k_max),
+            pol.init_state(n_total), agg0)
+    (rounds_done, duration, _, _, _, agg), hist = jax.lax.scan(
         step, init, jnp.arange(max_periods, dtype=jnp.int32)
     )
-    return rounds_done, duration, hist
+    return rounds_done, duration, (hist if collect_history else agg)
 
 
 _episode = functools.partial(jax.jit, static_argnames=_EPISODE_STATICS)(_episode_impl)
@@ -227,7 +258,7 @@ _episode = functools.partial(jax.jit, static_argnames=_EPISODE_STATICS)(_episode
 @functools.partial(jax.jit, static_argnames=_EPISODE_STATICS)
 def _episode_batch(arrivals, counts, keys, *, policy, net, n_total, k_max,
                    rounds_required, max_periods, n_bids, alpha_fair,
-                   intra_backend, channel, churn):
+                   intra_backend, warm_start, collect_history, channel, churn):
     """vmap of the episode over a leading seeds axis -- one compiled call
     evaluates a whole scenario sweep."""
 
@@ -236,6 +267,7 @@ def _episode_batch(arrivals, counts, keys, *, policy, net, n_total, k_max,
             a, c, k, policy=policy, net=net, n_total=n_total, k_max=k_max,
             rounds_required=rounds_required, max_periods=max_periods,
             n_bids=n_bids, alpha_fair=alpha_fair, intra_backend=intra_backend,
+            warm_start=warm_start, collect_history=collect_history,
             channel=channel, churn=churn,
         )
 
@@ -244,6 +276,18 @@ def _episode_batch(arrivals, counts, keys, *, policy, net, n_total, k_max,
 
 def _summarize(cfg: SimConfig, rounds_done, duration, hist) -> dict:
     duration = np.asarray(duration)
+    if not cfg.collect_history:
+        agg = hist
+        return {
+            "avg_duration": float(np.mean(duration)),
+            "std_duration": float(np.std(duration)),
+            "durations": [int(d) for d in duration],
+            "periods": int(agg["periods"]),
+            "history": None,
+            "totals": {k: float(agg[k]) for k in _AGG_KEYS},
+            "finished": bool(
+                np.all(np.asarray(rounds_done) >= cfg.rounds_required)),
+        }
     done = np.asarray(hist["all_done"])
     periods = int(np.argmax(done)) + 1 if done.any() else cfg.max_periods
     return {
@@ -267,7 +311,8 @@ def _episode_statics(cfg: SimConfig, net: network.NetworkConfig,
         policy=cfg.policy, net=net, n_total=cfg.n_services_total, k_max=k_max,
         rounds_required=cfg.rounds_required, max_periods=cfg.max_periods,
         n_bids=cfg.n_bids, alpha_fair=cfg.alpha_fair,
-        intra_backend=cfg.intra_backend,
+        intra_backend=cfg.intra_backend, warm_start=cfg.warm_start,
+        collect_history=cfg.collect_history,
         channel=scenarios.as_spec(cfg.channel_process, "iid"),
         churn=scenarios.as_spec(cfg.churn_process, "none"),
     )
@@ -313,14 +358,22 @@ def run_batch(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None) -
     )
     duration = np.asarray(duration)
     finished = np.all(np.asarray(rounds_done) >= cfg.rounds_required, axis=1)
-    return {
+    out = {
         "seeds": seeds,
         "avg_duration": duration.mean(axis=1),
         "std_duration": duration.std(axis=1),
         "durations": duration,
         "finished": finished,
-        "history": {k: np.asarray(v) for k, v in hist.items()},
     }
+    if cfg.collect_history:
+        out["history"] = {k: np.asarray(v) for k, v in hist.items()}
+    else:
+        # hist is the per-seed aggregate carry: scalar reductions only, no
+        # (S, T) stacked arrays ever leave the device.
+        out["history"] = None
+        out["periods"] = np.asarray(hist["periods"])
+        out["totals"] = {k: np.asarray(hist[k]) for k in _AGG_KEYS}
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -328,23 +381,23 @@ def run_batch(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None) -
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _legacy_step_jit(policy, n_bids, alpha_fair, intra_backend, net,
-                     n_total, k_max, rounds_required, channel, churn):
+def _legacy_step_jit(policy, n_bids, alpha_fair, intra_backend, warm_start,
+                     net, n_total, k_max, rounds_required, channel, churn):
     """Jitted period step + scenario processes, cached across ``run`` calls
     (per static shape / scenario spec) so per-seed sweeps / resumes reuse one
     compilation."""
-    policy_fn = policy_mod.get_policy(
-        policy, n_bids=n_bids, alpha_fair=alpha_fair,
+    pol = policy_mod.get_stateful_policy(
+        policy, warm_start=warm_start, n_bids=n_bids, alpha_fair=alpha_fair,
         intra_backend=intra_backend,
     )
     chan_proc = scenarios.get_channel(channel, net)
     churn_proc = scenarios.get_churn(churn, net)
     step = jax.jit(functools.partial(
-        _period_step, policy_fn=policy_fn, chan_step=chan_proc.step,
+        _period_step, policy_fn=pol.step, chan_step=chan_proc.step,
         churn_step=churn_proc.step, chan_rebuilds=chan_proc.rebuilds, net=net,
         n_total=n_total, k_max=k_max, rounds_required=rounds_required,
     ))
-    return step, chan_proc, churn_proc
+    return step, chan_proc, churn_proc, pol
 
 
 def _scenario_state_to_json(state) -> list:
@@ -395,8 +448,9 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
     duration = list(state["duration"])
     history = list(state["history"])
 
-    step_jit, chan_proc, churn_proc = _legacy_step_jit(
-        cfg.policy, cfg.n_bids, cfg.alpha_fair, cfg.intra_backend, net,
+    step_jit, chan_proc, churn_proc, pol = _legacy_step_jit(
+        cfg.policy, cfg.n_bids, cfg.alpha_fair, cfg.intra_backend,
+        cfg.warm_start, net,
         cfg.n_services_total, k_max, cfg.rounds_required,
         scenarios.as_spec(cfg.channel_process, "iid"),
         scenarios.as_spec(cfg.churn_process, "none"),
@@ -412,27 +466,32 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
             return _scenario_state_from_json(template, state[name])
         if period > 0 and jax.tree_util.tree_leaves(template):
             raise ValueError(
-                f"resume state has no {name!r} but the configured scenario "
-                f"processes are stateful -- was the snapshot written under a "
-                f"different scenario?")
+                f"resume state has no {name!r} but the configured scenario/"
+                f"policy processes are stateful -- was the snapshot written "
+                f"under a different configuration?")
         return template
 
     chan_state = _restore_scenario_state(
         "chan_state", chan_proc.init(key, cfg.n_services_total, k_max))
     churn_state = _restore_scenario_state(
         "churn_state", churn_proc.init(key, cfg.n_services_total, k_max))
+    pol_state = _restore_scenario_state(
+        "pol_state", pol.init_state(cfg.n_services_total))
 
     def _snapshot() -> dict:
         return {"period": period, "rounds_done": rounds_done,
                 "duration": duration, "history": history,
                 "chan_state": _scenario_state_to_json(chan_state),
-                "churn_state": _scenario_state_to_json(churn_state)}
+                "churn_state": _scenario_state_to_json(churn_state),
+                "pol_state": _scenario_state_to_json(pol_state)}
 
-    # With stateful scenario processes the step must run every period --
-    # even with no active service -- so the state trajectory matches the
-    # scan engine's period-per-step carry exactly.  Stateless processes
-    # (the defaults) keep the cheap skip of inactive periods.
-    stateless = not jax.tree_util.tree_leaves((chan_state, churn_state))
+    # With stateful scenario processes (or warm-started policy state) the
+    # step must run every period -- even with no active service -- so the
+    # state trajectory matches the scan engine's period-per-step carry
+    # exactly.  Stateless processes (the defaults) keep the cheap skip of
+    # inactive periods.
+    stateless = not jax.tree_util.tree_leaves(
+        (chan_state, churn_state, pol_state))
 
     while period < cfg.max_periods:
         if all(r >= cfg.rounds_required for r in rounds_done):
@@ -442,10 +501,10 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
             if arrivals[i] <= period and rounds_done[i] < cfg.rounds_required
         ]
         if active or not stateless:
-            rd, du, chan_state, churn_state, stats = step_jit(
+            rd, du, chan_state, churn_state, pol_state, stats = step_jit(
                 jnp.asarray(rounds_done, jnp.int32),
                 jnp.asarray(duration, jnp.int32),
-                chan_state, churn_state,
+                chan_state, churn_state, pol_state,
                 jnp.int32(period), arrivals_j, counts_j, key,
             )
             rounds_done = [int(r) for r in np.asarray(rd)]
@@ -466,7 +525,7 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
                 json.dump(snap, fp)
             os.replace(tmp, checkpoint_path)
 
-    return {
+    out = {
         "avg_duration": float(np.mean(duration)),
         "std_duration": float(np.std(duration)),
         "durations": duration,
@@ -475,3 +534,16 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
         "finished": all(r >= cfg.rounds_required for r in rounds_done),
         "state": _snapshot(),
     }
+    if not cfg.collect_history:
+        # Same summary shape as run_scan's aggregate mode.  The snapshot
+        # keeps the full per-period list (resumes need it); only the
+        # returned summary collapses to totals.  Skipped inactive periods
+        # contribute exactly zero to every total, matching the scan carry.
+        out["history"] = None
+        out["totals"] = {
+            "freq_sum": float(sum(h["freq_sum"] for h in history)),
+            "objective": float(sum(h["objective"] for h in history)),
+            "n_active": float(sum(len(h["active"]) for h in history)),
+            "n_clients": float(sum(h["n_clients"] for h in history)),
+        }
+    return out

@@ -2,6 +2,8 @@
 
   * bisect_alloc     -- batched intra-service water-filling (the paper's
                         fleet-scale hot loop)
+  * dual_demand      -- fused price->demand(+slope) evaluation, one launch
+                        per warm-started DISBA dual iteration
   * flash_attention  -- causal / sliding-window attention (train + prefill)
   * decode_attention -- flash-decoding vs long KV caches (serve_step)
   * mlstm_chunk      -- chunkwise-parallel mLSTM cell (xlstm / hybrid)

@@ -9,6 +9,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.bisect_alloc import bisect_alloc
 from repro.kernels.decode_attention import decode_attention
+from repro.kernels.dual_demand import dual_demand as dual_demand_pallas
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_chunk import mlstm_chunk
 
@@ -39,6 +40,16 @@ def intra_allocate(alpha, t_comp, b, *, use_pallas=None, interpret=False, iters=
         return bisect_alloc(alpha, t_comp, b, iters=iters,
                             interpret=interpret or not _on_tpu())
     return ref.bisect_alloc_ref(alpha, t_comp, b, iters=iters)
+
+
+def dual_demand(alpha, t_comp, lam, *, use_pallas=None, interpret=False, iters=48):
+    """Per-service demand b_n(lam) and closed-form slope db_n/dlam in one
+    fused evaluation -- the inner op of a warm-started DISBA dual iteration."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return dual_demand_pallas(alpha, t_comp, lam, iters=iters,
+                                  interpret=interpret or not _on_tpu())
+    return ref.dual_demand_ref(alpha, t_comp, lam, iters=iters)
 
 
 def mlstm(q, k, v, i_gate, f_gate, *, chunk=128, use_pallas=None, interpret=False):

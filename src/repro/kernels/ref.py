@@ -58,6 +58,18 @@ def bisect_alloc_ref(alpha, t_comp, b, iters: int = 48):
     return t_star, b_alloc
 
 
+def dual_demand_ref(alpha, t_comp, lam, iters: int = 48):
+    """Oracle for the fused dual-demand kernel: the Eq. 14 price->frequency
+    solve plus closed-form demand slope, delegated to the core solver so the
+    slope formula has exactly one jnp home (``disba.demand_slope_values``)."""
+    from repro.core import disba
+    from repro.core.types import ServiceSet
+
+    mask = alpha > 0
+    svc = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+    return disba.demand_slope_values(svc, lam, iters)
+
+
 def mlstm_chunk_ref(q, k, v, i_gate, f_gate, chunk=None):
     """Oracle for the chunked mLSTM kernel: the fully-parallel stabilized
     form (exact for any chunking)."""

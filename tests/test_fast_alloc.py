@@ -1,0 +1,382 @@
+"""The warm-started / kernel-fused allocation fast path:
+
+* ``solve_lambda_newton`` and ``solve_lambda_newton_warm`` parity with the
+  pinned solvers (``solve_lambda_bisect`` / ``disba``) on masked
+  fixed-capacity sets, from good, stale, and sentinel seeds;
+* the fused ``dual_demand`` Pallas kernel (interpret mode) against its
+  pure-jnp oracle, including the closed-form slope vs finite differences;
+* the joint (N, M) mBDF bisection bitwise against the vmapped per-column
+  solve it replaced;
+* auction leave-one-out charges: prefix-sum path vs the clearing-rerun
+  reference;
+* simulator state threading: warm-started durations match cold durations on
+  the golden scenarios, ``trace_count() == 1`` for every
+  (policy, warm_start) combination, ``collect_history=False`` aggregates,
+  and the legacy engine's warm checkpoint round trip.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import auction, disba, fairness, intra, network, policy
+from repro.core.types import ServiceSet, mask_inactive
+from repro.fl import simulator
+from repro.kernels import ops
+from repro.kernels.dual_demand import dual_demand
+
+B = network.B_TOTAL_MHZ
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "longterm_summary.json")
+
+
+def _masked_fixed_capacity_set(seed, n=9, k=31):
+    """Random padded ServiceSet with ragged counts and inactive slots."""
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(0.01, 0.3, size=(n, k)).astype(np.float32)
+    t_comp = rng.uniform(0.01, 0.06, size=(n, k)).astype(np.float32)
+    mask = np.zeros((n, k), dtype=bool)
+    for i in range(n):
+        mask[i, : rng.integers(2, k + 1)] = True
+    mask[rng.integers(0, n)] = False
+    alpha = np.where(mask, alpha, 0.0)
+    t_comp = np.where(mask, t_comp, 0.0)
+    return ServiceSet(alpha=jnp.asarray(alpha), t_comp=jnp.asarray(t_comp),
+                      mask=jnp.asarray(mask))
+
+
+# ---------------------------------------------------------------------------
+# Warm-started market clearing.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_newton_solvers_match_bisect_on_masked_sets(seed):
+    svc = _masked_fixed_capacity_set(seed)
+    ref = disba.solve_lambda_bisect(svc, B)
+    newt = disba.solve_lambda_newton(svc, B)
+    warm_cold = disba.solve_lambda_newton_warm(svc, B)
+    np.testing.assert_allclose(np.asarray(newt.b), np.asarray(ref.b),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(warm_cold.b), np.asarray(ref.b),
+                               rtol=1e-4, atol=1e-4)
+    # inactive slots stay at zero demand
+    inactive = ~np.asarray(svc.service_active())
+    assert np.all(np.asarray(warm_cold.b)[inactive] == 0.0)
+
+
+@pytest.mark.parametrize("seed_scale", [1.0, 1.05, 0.7, 3.0])
+def test_warm_clearer_converges_from_any_seed(seed_scale):
+    """A good, slightly stale, badly stale, or out-of-bracket seed must all
+    land on the bisect optimum -- the bracket safeguard never diverges."""
+    svc = _masked_fixed_capacity_set(3)
+    ref = disba.solve_lambda_bisect(svc, B)
+    res = disba.solve_lambda_newton_warm(
+        svc, B, lam_prev=ref.lam * jnp.float32(seed_scale))
+    np.testing.assert_allclose(np.asarray(res.b), np.asarray(ref.b),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(jnp.sum(res.b)), B, rtol=1e-5)
+
+
+def test_warm_clearer_sentinel_seed_matches_disba():
+    svc = _masked_fixed_capacity_set(4)
+    res = disba.solve_lambda_newton_warm(svc, B, lam_prev=disba.WARM_COLD)
+    ref = disba.disba(svc, B, gamma=0.1, eps=1e-4)
+    np.testing.assert_allclose(np.asarray(res.b), np.asarray(ref.b),
+                               rtol=5e-3, atol=1e-3)
+
+
+def test_demand_slope_matches_finite_difference():
+    svc = _masked_fixed_capacity_set(5)
+    lam = 0.4 * float(jnp.max(intra.p_max(svc)))
+    eps = 1e-4 * lam
+    d0, s0, _ = disba._demand_and_slope(svc, jnp.float32(lam), 48)
+    d1, _, _ = disba._demand_and_slope(svc, jnp.float32(lam + eps), 48)
+    fd = (float(d1) - float(d0)) / eps
+    np.testing.assert_allclose(float(s0), fd, rtol=5e-3)
+
+
+def test_warm_clearer_all_inactive_set():
+    svc = _masked_fixed_capacity_set(6)
+    none = mask_inactive(svc, jnp.zeros((svc.n_services,), bool))
+    res = disba.solve_lambda_newton_warm(none, B, lam_prev=0.5)
+    assert float(jnp.sum(jnp.abs(res.b))) == 0.0
+    assert np.all(np.isfinite(np.asarray(res.f)))
+
+
+# ---------------------------------------------------------------------------
+# The fused dual_demand kernel (interpret mode on CPU).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dual_demand_kernel_matches_reference(seed):
+    svc = _masked_fixed_capacity_set(seed)
+    lam = (0.2 + 0.2 * seed) * float(jnp.max(intra.p_max(svc)))
+    b_ref, s_ref = ops.dual_demand(svc.alpha, svc.t_comp, lam,
+                                   use_pallas=False)
+    b_k, s_k = dual_demand(svc.alpha, svc.t_comp, jnp.float32(lam),
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_ref),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=1e-3, atol=1e-5)
+    # inactive rows emit exactly zero demand and slope
+    inactive = ~np.asarray(svc.service_active())
+    assert np.all(np.asarray(b_k)[inactive] == 0.0)
+    assert np.all(np.asarray(s_k)[inactive] == 0.0)
+
+
+def test_warm_clearer_pallas_backend_matches_reference():
+    svc = _masked_fixed_capacity_set(7)
+    ref = disba.solve_lambda_newton_warm(svc, B)
+    # off-TPU, use_pallas=True inside the backend runs the kernel in
+    # interpret mode (the ops dispatch convention)
+    res = disba.solve_lambda_newton_warm(svc, B, backend="pallas")
+    np.testing.assert_allclose(np.asarray(res.b), np.asarray(ref.b),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_unknown_demand_backend_raises():
+    svc = _masked_fixed_capacity_set(0)
+    with pytest.raises(ValueError, match="demand backend"):
+        disba.solve_lambda_newton_warm(svc, B, backend="nope")
+
+
+# ---------------------------------------------------------------------------
+# Joint-grid mBDF and prefix-sum auction charges.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alpha_fair", [0.0, 0.5, 1.0])
+def test_mbdf_grid_bitwise_matches_vmapped_columns(alpha_fair):
+    svc = _masked_fixed_capacity_set(1)
+    pmax = intra.p_max(svc)
+    m = jnp.arange(1, 6, dtype=svc.alpha.dtype)
+    prices = m[None, :] * pmax[:, None] / 6.0
+    ref = jax.vmap(lambda p: fairness.mbdf(svc, p, alpha_fair),
+                   in_axes=1, out_axes=1)(prices)
+    grid = fairness.mbdf_grid(svc, prices, alpha_fair)
+    np.testing.assert_array_equal(np.asarray(grid), np.asarray(ref))
+
+
+@pytest.mark.parametrize("seed,b_total", [(0, 10.0), (1, 300.0), (2, 40.0)])
+def test_leave_one_out_prices_match_clearing_reruns(seed, b_total):
+    rng = np.random.default_rng(seed)
+    n, k = 8, 7
+    alpha = rng.uniform(0.01, 0.5, size=(n, k)).astype(np.float32)
+    t_comp = rng.uniform(0.005, 0.08, size=(n, k)).astype(np.float32)
+    if seed == 2:
+        alpha[5] = alpha[1]
+        t_comp[5] = t_comp[1]          # identical providers -> price ties
+    from repro.core.types import make_service_set
+    svc = make_service_set(alpha, t_comp)
+    bid = auction.uniform_truthful_bids(svc, 5, 0.5)
+    eye = jnp.eye(n, dtype=bid.prices.dtype)
+    z_rerun = jax.vmap(
+        lambda e: auction.clearing_price(bid, b_total, weights=1.0 - e))(eye)
+    z_prefix = auction.leave_one_out_prices(bid, b_total)
+    np.testing.assert_allclose(np.asarray(z_prefix), np.asarray(z_rerun),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("seed,b_total", [(0, 10.0), (1, 300.0), (2, 40.0)])
+def test_prefix_charges_match_rerun_reference(seed, b_total):
+    rng = np.random.default_rng(seed + 10)
+    n, k = 9, 7
+    alpha = rng.uniform(0.01, 0.5, size=(n, k)).astype(np.float32)
+    t_comp = rng.uniform(0.005, 0.08, size=(n, k)).astype(np.float32)
+    from repro.core.types import make_service_set
+    svc = make_service_set(alpha, t_comp)
+    bid = auction.uniform_truthful_bids(svc, 5, 0.5)
+    b, _ = auction.allocate(bid, b_total)
+    c_rerun = auction.charges(svc, bid, b, b_total, 0.5, method="rerun")
+    c_prefix = auction.charges(svc, bid, b, b_total, 0.5, method="prefix")
+    np.testing.assert_allclose(np.asarray(c_prefix), np.asarray(c_rerun),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unknown_charges_method_raises():
+    svc = _masked_fixed_capacity_set(0)
+    bid = auction.uniform_truthful_bids(svc, 3, 0.5)
+    b, _ = auction.allocate(bid, B)
+    with pytest.raises(ValueError, match="charges method"):
+        auction.charges(svc, bid, b, B, 0.5, method="nope")
+
+
+# ---------------------------------------------------------------------------
+# Stateful policy protocol.
+# ---------------------------------------------------------------------------
+
+def test_stateless_wrapper_matches_get_policy():
+    svc = _masked_fixed_capacity_set(2)
+    for name in policy.available():
+        fn = policy.get_policy(name)
+        pol = policy.get_stateful_policy(name, warm_start=False)
+        state = pol.init_state(svc.n_services)
+        assert state == ()
+        b0, f0 = fn(svc, B)
+        b1, f1, state = pol.step(svc, B, state)
+        np.testing.assert_array_equal(np.asarray(b0), np.asarray(b1))
+        np.testing.assert_array_equal(np.asarray(f0), np.asarray(f1))
+
+
+def test_warm_coop_step_carries_dual_price():
+    svc = _masked_fixed_capacity_set(2)
+    pol = policy.get_stateful_policy("coop", warm_start=True)
+    state = pol.init_state(svc.n_services)
+    assert float(state) == disba.WARM_COLD
+    b, f, state = pol.step(svc, B, state)
+    ref = disba.solve_lambda_bisect(svc, B)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(ref.b),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(state), float(ref.lam), rtol=1e-4)
+    # an all-inactive period must NOT poison the carried price
+    none = mask_inactive(svc, jnp.zeros((svc.n_services,), bool))
+    _, _, state2 = pol.step(none, B, state)
+    assert float(state2) == float(state)
+
+
+def test_stateful_policy_unknown_option_raises():
+    with pytest.raises(ValueError, match="unknown option"):
+        policy.get_stateful_policy("coop", warm_start=True, iterz=3)
+    with pytest.raises(ValueError, match="unknown policy"):
+        policy.get_stateful_policy("nope")
+
+
+# ---------------------------------------------------------------------------
+# Simulator: warm start + collect_history through both engines.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden() -> dict:
+    with open(GOLDEN_PATH) as fp:
+        return json.load(fp)
+
+
+@pytest.mark.parametrize("pol", simulator.POLICIES)
+def test_warm_start_durations_match_cold_on_golden_scenarios(golden, pol):
+    """The satellite property: warm-started batches reproduce the cold-start
+    durations on the pinned golden scenarios, for every policy."""
+    cfg = simulator.SimConfig(policy=pol, **golden["config"])
+    cold = simulator.run_batch(cfg, golden["seeds"])
+    warm = simulator.run_batch(dataclasses.replace(cfg, warm_start=True),
+                               golden["seeds"])
+    np.testing.assert_array_equal(np.asarray(warm["durations"]),
+                                  np.asarray(cold["durations"]))
+    assert [bool(x) for x in warm["finished"]] == \
+        [bool(x) for x in cold["finished"]]
+
+
+@pytest.mark.parametrize("warm_start", [False, True])
+@pytest.mark.parametrize("pol", simulator.POLICIES)
+def test_single_trace_for_every_policy_warm_combination(pol, warm_start):
+    cfg = simulator.SimConfig(policy=pol, n_services_total=3,
+                              rounds_required=60, p_arrive=2.0, seed=0,
+                              max_periods=60, warm_start=warm_start)
+    simulator.reset_trace_count()
+    out = simulator.run_scan(cfg)
+    assert out["finished"]
+    assert simulator.trace_count() == 1
+
+
+def test_single_trace_warm_with_stateful_scenarios():
+    from repro import scenarios
+    cfg = simulator.SimConfig(
+        policy="coop", n_services_total=3, rounds_required=60, p_arrive=2.0,
+        seed=0, max_periods=60, warm_start=True,
+        channel_process=scenarios.spec("gauss_markov", rho=0.9),
+        churn_process=scenarios.spec("bernoulli", p_drop=0.1),
+    )
+    simulator.reset_trace_count()
+    simulator.run_scan(cfg)
+    assert simulator.trace_count() == 1
+
+
+def test_warm_batch_bitwise_identical_to_single_seed():
+    cfg = simulator.SimConfig(policy="coop", n_services_total=3,
+                              rounds_required=80, p_arrive=2.0,
+                              max_periods=80, k_max=24, warm_start=True)
+    batch = simulator.run_batch(cfg, [0, 1])
+    for i, s in enumerate([0, 1]):
+        single = simulator.run_scan(dataclasses.replace(cfg, seed=s))
+        assert list(batch["durations"][i]) == single["durations"]
+        for key in ("freq_sum", "objective"):
+            p = single["periods"]
+            np.testing.assert_array_equal(batch["history"][key][i][:p],
+                                          single["history"][key])
+
+
+def test_legacy_run_matches_scan_with_warm_start():
+    cfg = simulator.SimConfig(policy="coop", n_services_total=3,
+                              rounds_required=100, p_arrive=2.0, seed=1,
+                              max_periods=100, warm_start=True)
+    legacy = simulator.run(cfg)
+    scan = simulator.run_scan(cfg)
+    assert legacy["finished"] and scan["finished"]
+    assert scan["durations"] == legacy["durations"]
+    # the dual price rides in the snapshot
+    assert len(legacy["state"]["pol_state"]) == 1
+
+
+def test_legacy_warm_checkpoint_resume_is_exact(tmp_path):
+    cfg = simulator.SimConfig(policy="coop", n_services_total=3,
+                              rounds_required=100, p_arrive=2.0, seed=2,
+                              max_periods=40, warm_start=True)
+    full = simulator.run(cfg)
+    # stop early, then resume from the snapshot
+    part = simulator.run(dataclasses.replace(cfg, max_periods=12))
+    resumed = simulator.run(cfg, state=part["state"])
+    assert resumed["durations"] == full["durations"]
+    assert resumed["periods"] == full["periods"]
+
+
+def test_collect_history_false_matches_history_path():
+    cfg = simulator.SimConfig(policy="es", n_services_total=3,
+                              rounds_required=100, p_arrive=2.0, seed=1,
+                              max_periods=100, k_max=24)
+    with_hist = simulator.run_scan(cfg)
+    no_hist = simulator.run_scan(
+        dataclasses.replace(cfg, collect_history=False))
+    assert no_hist["history"] is None
+    assert no_hist["durations"] == with_hist["durations"]
+    assert no_hist["periods"] == with_hist["periods"]
+    for key in ("freq_sum", "objective", "n_active", "n_clients"):
+        np.testing.assert_allclose(
+            no_hist["totals"][key], float(np.sum(with_hist["history"][key])),
+            rtol=1e-5)
+
+
+def test_collect_history_false_legacy_run_matches_scan():
+    """run() and run_scan() return the same summary shape and totals when
+    history collection is off."""
+    cfg = simulator.SimConfig(policy="es", n_services_total=3,
+                              rounds_required=100, p_arrive=2.0, seed=1,
+                              max_periods=100, k_max=24,
+                              collect_history=False)
+    scan = simulator.run_scan(cfg)
+    legacy = simulator.run(cfg)
+    assert legacy["history"] is None
+    assert legacy["durations"] == scan["durations"]
+    assert legacy["periods"] == scan["periods"]
+    for key in ("freq_sum", "objective", "n_active", "n_clients"):
+        np.testing.assert_allclose(legacy["totals"][key],
+                                   scan["totals"][key], rtol=1e-5)
+
+
+def test_collect_history_false_batch_aggregates():
+    cfg = simulator.SimConfig(policy="coop", n_services_total=3,
+                              rounds_required=80, p_arrive=2.0,
+                              max_periods=80, k_max=24,
+                              collect_history=False)
+    seeds = [0, 1, 2]
+    batch = simulator.run_batch(cfg, seeds)
+    assert batch["history"] is None
+    for i, s in enumerate(seeds):
+        single = simulator.run_scan(dataclasses.replace(cfg, seed=s))
+        assert list(batch["durations"][i]) == single["durations"]
+        assert int(batch["periods"][i]) == single["periods"]
+        np.testing.assert_allclose(float(batch["totals"]["objective"][i]),
+                                   single["totals"]["objective"], rtol=1e-6)

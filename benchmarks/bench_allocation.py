@@ -130,7 +130,7 @@ def run(tiny: bool = False, time_kernel: bool | None = None) -> dict:
     return {
         "schema": SCHEMA,
         "tiny": tiny,
-        "backend": jax.default_backend(),
+        **common.provenance(),
         "b_total_mhz": network.B_TOTAL_MHZ,
         "coop": _bench_coop(coop_n, coop_k, repeats, time_kernel),
         "auction_charges": _bench_auction(auction_ns, 8 if tiny else 16,
@@ -142,6 +142,7 @@ def validate(data: dict) -> None:
     """Schema check used by CI and tests: required keys present + parseable
     numbers."""
     assert data["schema"] == SCHEMA
+    common.validate_provenance(data)
     coop = data["coop"]
     for key in ("cold_bisect_us", "warm_newton_us", "speedup_warm_vs_cold",
                 "warm_vs_cold_max_dev_mhz"):

@@ -1,12 +1,57 @@
-"""Shared benchmark utilities: wall-clock timing of jitted callables and the
-canonical `name,us_per_call,derived` CSV row format."""
+"""Shared benchmark utilities: wall-clock timing of jitted callables, the
+canonical `name,us_per_call,derived` CSV row format, and the provenance
+stamp every BENCH_*.json artifact carries."""
 from __future__ import annotations
 
+import datetime
 import json
 import os
+import subprocess
 import time
 
 import jax
+
+
+def provenance() -> dict:
+    """Stamp for BENCH_*.json artifacts: the commit and date the numbers were
+    measured at plus the jax backend that produced them, so the bench
+    trajectory is machine-reconstructable from the artifacts alone.
+
+    ``dirty`` records whether the working tree had uncommitted changes at
+    measurement time -- a PR's refreshed artifact is necessarily stamped
+    with the parent commit plus ``dirty: true`` (the measuring tree IS the
+    commit under review); ``dirty: false`` means the stamped commit alone
+    reproduces the numbers.
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def _git(*args):
+        return subprocess.run(["git", *args], capture_output=True, text=True,
+                              cwd=repo, timeout=10).stdout
+
+    try:
+        commit = _git("rev-parse", "HEAD").strip() or "unknown"
+        dirty = bool(_git("status", "--porcelain").strip())
+    except (OSError, subprocess.SubprocessError):
+        commit, dirty = "unknown", False
+    return {
+        "commit": commit,
+        "dirty": dirty,
+        "date": datetime.datetime.now(datetime.timezone.utc)
+                        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "backend": jax.default_backend(),
+    }
+
+
+def validate_provenance(data: dict) -> None:
+    """Assert the artifact carries the stamp fields (schema checkers call
+    this so an unstamped artifact fails CI, not a later archaeology dig)."""
+    for key in ("schema", "commit", "date", "backend"):
+        assert isinstance(data.get(key), str) and data[key], (
+            f"bench artifact missing provenance field {key!r}")
+    assert isinstance(data.get("dirty"), bool), (
+        "bench artifact missing provenance field 'dirty'")
+    assert "T" in data["date"], "date must be ISO-8601 UTC"
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:

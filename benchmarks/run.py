@@ -16,7 +16,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: tables,static,longterm,scale,"
-                         "allocation,roofline")
+                         "allocation,fleet,roofline")
     ap.add_argument("--full", action="store_true",
                     help="paper-sized long-term sims (slow)")
     args = ap.parse_args()
@@ -37,7 +37,7 @@ def main() -> None:
             print(f"{name}/FAILED,,{traceback.format_exc().splitlines()[-1]}",
                   flush=True)
 
-    from benchmarks import (allocator_scale, bench_allocation,
+    from benchmarks import (allocator_scale, bench_allocation, bench_fleet,
                             paper_figs_longterm, paper_figs_static,
                             paper_tables, roofline)
 
@@ -46,6 +46,7 @@ def main() -> None:
     section("longterm", lambda: paper_figs_longterm.run(full=args.full))
     section("scale", allocator_scale.run)
     section("allocation", lambda: bench_allocation.run_rows(tiny=not args.full))
+    section("fleet", lambda: bench_fleet.run_rows(tiny=not args.full))
     section("roofline", roofline.run)
     if failures:
         sys.exit(1)

@@ -51,6 +51,29 @@ def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
         return jax.make_mesh(axis_shapes, axis_names, devices=devices)
 
 
+def flat_mesh(n_devices: int | None = None, axis_name: str = "data",
+              devices=None):
+    """One-axis device mesh over the first ``n_devices`` devices.
+
+    The single mesh-construction path for every batch/seed-sharded solver
+    (``fl.simulator.run_fleet``, ``core.disba.disba_sharded``,
+    ``launch.mesh.make_fleet_mesh``): one place encodes the device selection
+    and the version-tolerant ``make_mesh`` call.  ``n_devices=None`` takes
+    every visible device.
+    """
+    if devices is None:
+        devices = jax.devices()
+    if n_devices is None:
+        n_devices = len(devices)
+    if not 1 <= n_devices <= len(devices):
+        raise ValueError(
+            f"n_devices={n_devices} outside [1, {len(devices)}] visible "
+            f"devices")
+    return make_mesh((n_devices,), (axis_name,),
+                     axis_types=(AxisType.Auto,),
+                     devices=devices[:n_devices])
+
+
 def abstract_mesh(axis_shapes, axis_names, *, axis_types=None):
     """``jax.sharding.AbstractMesh`` across its two historical signatures:
     new JAX takes (sizes, names, axis_types=tuple); 0.4.x takes a single
@@ -64,4 +87,4 @@ def abstract_mesh(axis_shapes, axis_names, *, axis_types=None):
 
 
 __all__ = ["shard_map", "shard_map_unchecked", "AxisType", "make_mesh",
-           "abstract_mesh"]
+           "flat_mesh", "abstract_mesh"]

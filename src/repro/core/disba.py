@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.compat import shard_map_unchecked
+from repro.compat import flat_mesh, shard_map_unchecked
 from repro.core import intra
 from repro.core.types import BISECT_ITERS, ServiceSet
 
@@ -357,7 +357,7 @@ def solve_lambda_newton_warm(
 # ---------------------------------------------------------------------------
 
 def disba_sharded(
-    mesh: Mesh,
+    mesh: Mesh | None,
     svc: ServiceSet,
     total_bandwidth: float,
     axis_names: tuple[str, ...] = ("data",),
@@ -369,11 +369,20 @@ def disba_sharded(
     Mirrors Algorithm 1's communication pattern exactly: per-shard local
     bisections (the providers' Eq.-12 solves) + one scalar ``psum`` per dual
     iteration (the operator's demand aggregation).  N must be divisible by the
-    product of the mesh axis sizes (pad with empty services otherwise).
+    product of the mesh axis sizes (pad with empty services otherwise --
+    all-masked rows demand exactly zero bandwidth, so padding never perturbs
+    the clearing price).
+
+    ``mesh=None`` builds a one-axis mesh over every visible device via
+    ``compat.flat_mesh`` -- the same mesh-construction path as
+    ``fl.simulator.run_fleet`` (requires ``len(axis_names) == 1``).
     """
-    spec_svc = ServiceSet(
-        alpha=P(axis_names), t_comp=P(axis_names), mask=P(axis_names)
-    )
+    if mesh is None:
+        if len(axis_names) != 1:
+            raise ValueError(
+                f"mesh=None builds a one-axis mesh; pass an explicit mesh "
+                f"for multi-axis sharding over {axis_names}")
+        mesh = flat_mesh(axis_name=axis_names[0])
 
     def shard_fn(alpha, t_comp, mask):
         local = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)

@@ -70,6 +70,14 @@ class StatefulPolicy(NamedTuple):
     Newton clear that replaces the 48-trip cold bisection.  Policies without
     a warm variant get the trivial wrapper (empty carry), so every
     (policy, warm_start) combination is valid.
+
+    Batching contract: ``init_state`` must be a *pure, key-free* function of
+    the slot count -- no RNG, no data-dependent shapes.  The sweep engines
+    (``run_batch``'s vmap, ``run_fleet``'s shard_map of chunked vmaps) trace
+    it once per episode batch, broadcasting the constant init across the
+    seed axis and each device shard; a stateful init would need a key
+    threaded per episode and would break the bitwise equivalence between
+    sharded/chunked and flat sweeps.
     """
 
     init_state: Callable[[int], Any]

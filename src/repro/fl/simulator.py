@@ -20,6 +20,24 @@ periods or episodes run (see ``trace_count``).  ``run_batch`` vmaps the same
 compiled episode over a batch of seeds for scenario sweeps: one compiled call
 evaluates many network conditions.
 
+``run_fleet`` -- the device-sharded, memory-bounded sweep engine for
+Monte-Carlo fleets of 10k+ episodes per call.  The fleet's seed axis is
+sharded over a one-axis device mesh (``launch.mesh.make_fleet_mesh`` /
+``compat.flat_mesh``) with ``compat.shard_map_unchecked``; inside each
+device the local batch is processed in fixed-size chunks by an outer
+``lax.map`` whose body is the vmapped compiled episode, so the episode
+working set is O(chunk), not O(fleet) -- at fleet sizes where one flat vmap
+thrashes the cache (a (4096, N, K) solver working set is tens of MB per
+array), the chunked sweep keeps every bisection trip L2-resident.  Episode
+input buffers are donated at the jit boundary and the period-step carry is
+reused in place by XLA; beyond the O(chunk) working set only the requested
+outputs are allocated, so a ``collect_history=False`` sweep never
+materializes any (S, T) array.  Every episode stays bitwise identical to its
+own ``run_scan`` regardless of sharding/chunking, and the period step still
+traces exactly once (``trace_count()``).  Fleet setup is O(1) dispatches:
+arrivals and client counts for all seeds come from one compiled, vmapped
+device-side draw (``_static_draws_batch``).
+
 ``run`` -- the legacy per-period Python loop, kept as the checkpointable
 reference engine (plain-dict state survives crashes; exercised by
 tests/test_fl_runtime.py).  It consumes the *same* per-period step math as
@@ -41,8 +59,9 @@ Rayleigh block fading), ``arrival_process`` (Poisson, periodic, batched,
 bursty MMPP), and ``churn_process`` (none, Bernoulli, Gilbert client
 dropout).  Channel and churn processes are stateful ``(key, state, svc) ->
 (state, svc')`` transforms whose state rides in the scan carry, so every
-scenario combination still compiles the period step exactly once; the
-defaults reproduce the pre-scenario engine bitwise.
+scenario combination still compiles the period step exactly once.  Arrival
+processes are device-side per-episode draws (see ``_draws``), batched over
+the fleet's seed axis.
 """
 from __future__ import annotations
 
@@ -54,12 +73,19 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro import scenarios
+from repro import compat, scenarios
 from repro.core import network, policy as policy_mod
 from repro.core.types import ServiceSet, mask_inactive
+from repro.launch import mesh as mesh_lib
 
 POLICIES = ("coop", "selfish", "ec", "es", "pp")
+
+# Default per-device chunk of run_fleet: small enough that the period step's
+# (chunk, N, K) solver working set stays cache-resident through the
+# bisection/Newton trips, large enough to amortize the chunk loop.
+FLEET_CHUNK = 64
 
 # Incremented each time the per-period allocation step is *traced* (not run).
 # The scan engine's acceptance bar is exactly one trace per episode shape --
@@ -123,24 +149,76 @@ def _k_cap(cfg: SimConfig) -> int:
     return int(np.ceil(cfg.mean_clients + 5.0 * np.sqrt(max(cfg.var_clients, 0.0))))
 
 
-def _static_draws(cfg: SimConfig, net: network.NetworkConfig) -> tuple[np.ndarray, np.ndarray]:
-    """Episode-static randomness: arrival periods + per-service client counts.
+# Salt folded into the episode key to derive the episode-static draw stream
+# (arrival periods + client counts).  Follows the scenarios.base salt
+# convention: above every period number, distinct from the scenario-state
+# salts, so the static draws never collide with per-period sampling.
+_DRAW_SALT = (1 << 30) + 3
 
-    Arrival periods come from the registered ``arrival_process`` (default:
-    cumulative exponential gaps, the paper's Poisson process -- same RNG
-    stream as the pre-scenario engine).  Counts are fixed at arrival;
-    channels are resampled per period by the channel process (inside the
-    compiled step).
+# Version tag of the episode-static draw stream, written into legacy-engine
+# checkpoints: resuming re-derives arrivals/counts from cfg.seed, so a
+# snapshot from a different stream (e.g. the pre-fleet host-NumPy draws)
+# must be refused, not silently continued with different arrivals.
+DRAW_STREAM = "device/v1"
+
+_DRAW_STATICS = ("arrival", "n_total", "p_arrive", "mean_clients",
+                 "var_clients", "k_min", "k_cap")
+
+
+@functools.partial(jax.jit, static_argnames=_DRAW_STATICS)
+def _draws(keys, *, arrival, n_total, p_arrive, mean_clients, var_clients,
+           k_min, k_cap):
+    """Episode-static randomness for a whole fleet in ONE compiled dispatch.
+
+    Arrival periods come from the registered device-side ``arrival_process``
+    sampler (default: cumulative exponential gaps, the paper's Poisson
+    process); client counts are a clipped normal, fixed at arrival.  Both are
+    drawn per episode key and vmapped over the fleet's seed axis, so setup
+    cost is O(1) dispatches for any fleet size -- and because each row
+    depends only on its own key, the batched draw is bitwise identical to
+    per-seed draws (asserted in tests/test_fleet.py).
     """
-    rng = np.random.default_rng(cfg.seed)
-    draw = scenarios.get_arrival(cfg.arrival_process)
-    arrivals = np.asarray(
-        draw(rng, cfg.n_services_total, cfg.p_arrive), dtype=np.int64)
-    counts = np.clip(
-        np.round(rng.normal(cfg.mean_clients, np.sqrt(max(cfg.var_clients, 1e-9)),
-                            size=cfg.n_services_total)), net.k_min, _k_cap(cfg)
-    ).astype(np.int64)
-    return arrivals, counts
+    draw = scenarios.get_arrival(arrival)
+    std = np.sqrt(max(var_clients, 1e-9))
+
+    def one(key):
+        k_arr, k_cnt = jax.random.split(jax.random.fold_in(key, _DRAW_SALT))
+        arrivals = draw(k_arr, n_total, p_arrive).astype(jnp.int32)
+        counts = jnp.clip(
+            jnp.round(mean_clients
+                      + std * jax.random.normal(k_cnt, (n_total,), jnp.float32)),
+            k_min, k_cap).astype(jnp.int32)
+        return arrivals, counts
+
+    return jax.vmap(one)(keys)
+
+
+def _episode_keys(seeds) -> jax.Array:
+    """Per-episode PRNG keys -- the same stream run_scan/run_batch always fed
+    the compiled episode; the static draws branch off it via ``_DRAW_SALT``."""
+    return jax.vmap(jax.random.key)(jnp.asarray(seeds, jnp.uint32) + 7)
+
+
+def _draw_statics(cfg: SimConfig, net: network.NetworkConfig) -> dict:
+    return dict(arrival=scenarios.as_spec(cfg.arrival_process, "poisson"),
+                n_total=cfg.n_services_total, p_arrive=cfg.p_arrive,
+                mean_clients=cfg.mean_clients, var_clients=cfg.var_clients,
+                k_min=net.k_min, k_cap=_k_cap(cfg))
+
+
+def _static_draws_batch(
+    cfg: SimConfig, net: network.NetworkConfig, seeds,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched episode-static draws: (S, N) arrivals + client counts."""
+    arrivals, counts = _draws(_episode_keys(seeds), **_draw_statics(cfg, net))
+    return np.asarray(arrivals), np.asarray(counts)
+
+
+def _static_draws(cfg: SimConfig, net: network.NetworkConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Single-episode view of ``_static_draws_batch`` (the looped reference:
+    calling this per seed is bitwise identical to one batched call)."""
+    arrivals, counts = _static_draws_batch(cfg, net, [cfg.seed])
+    return arrivals[0].astype(np.int64), counts[0].astype(np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -334,32 +412,12 @@ def run_scan(cfg: SimConfig, net: network.NetworkConfig | None = None) -> dict:
     return _summarize(cfg, rounds_done, duration, hist)
 
 
-def run_batch(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None) -> dict:
-    """Scenario sweep: the compiled episode vmapped over ``seeds``.
-
-    Every engine pads clients to the same config-derived ``k_max``
-    (``_k_cap``), so the sweep is a single compiled call AND each episode is
-    bitwise identical to its own ``run_scan``/``run`` regardless of which
-    other seeds share the batch.  Returns per-seed summaries stacked:
-    avg_duration (S,), durations (S, N), ...
-    """
-    net = net or _default_net(cfg)
-    seeds = list(seeds)
-    if not seeds:
-        raise ValueError("run_batch needs at least one seed")
-    draws = [_static_draws(dataclasses.replace(cfg, seed=s), net) for s in seeds]
-    arrivals = np.stack([a for a, _ in draws])
-    counts = np.stack([c for _, c in draws])
-    k_max = _k_cap(cfg)
-    keys = jax.vmap(jax.random.key)(jnp.asarray(seeds, jnp.uint32) + 7)
-    rounds_done, duration, hist = _episode_batch(
-        jnp.asarray(arrivals, jnp.int32), jnp.asarray(counts, jnp.int32),
-        keys, **_episode_statics(cfg, net, k_max),
-    )
+def _summarize_batch(cfg: SimConfig, seeds, rounds_done, duration, hist) -> dict:
+    """Per-seed stacked summary shared by ``run_batch`` and ``run_fleet``."""
     duration = np.asarray(duration)
     finished = np.all(np.asarray(rounds_done) >= cfg.rounds_required, axis=1)
     out = {
-        "seeds": seeds,
+        "seeds": list(seeds),
         "avg_duration": duration.mean(axis=1),
         "std_duration": duration.std(axis=1),
         "durations": duration,
@@ -373,6 +431,133 @@ def run_batch(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None) -
         out["history"] = None
         out["periods"] = np.asarray(hist["periods"])
         out["totals"] = {k: np.asarray(hist[k]) for k in _AGG_KEYS}
+    return out
+
+
+def run_batch(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None) -> dict:
+    """Scenario sweep: the compiled episode vmapped over ``seeds``.
+
+    Every engine pads clients to the same config-derived ``k_max``
+    (``_k_cap``), so the sweep is a single compiled call AND each episode is
+    bitwise identical to its own ``run_scan``/``run`` regardless of which
+    other seeds share the batch.  Returns per-seed summaries stacked:
+    avg_duration (S,), durations (S, N), ...
+    """
+    net = net or _default_net(cfg)
+    seeds = list(seeds)
+    if not seeds:
+        raise ValueError("run_batch needs at least one seed")
+    keys = _episode_keys(seeds)
+    arrivals, counts = _draws(keys, **_draw_statics(cfg, net))
+    rounds_done, duration, hist = _episode_batch(
+        arrivals, counts, keys, **_episode_statics(cfg, net, _k_cap(cfg)),
+    )
+    return _summarize_batch(cfg, seeds, rounds_done, duration, hist)
+
+
+# ---------------------------------------------------------------------------
+# Fleet engine: device-sharded, memory-bounded episode sweeps.
+# ---------------------------------------------------------------------------
+
+def _fleet_shape(n_seeds: int, n_dev: int, chunk_size: int | None) -> tuple[int, int, int]:
+    """(chunk, n_chunks, padded fleet size): seeds are padded up to
+    n_dev * n_chunks * chunk so every device runs the same chunk grid (the
+    pad rows are dropped before summarizing)."""
+    per_dev = -(-n_seeds // n_dev)
+    chunk = max(1, min(chunk_size or FLEET_CHUNK, per_dev))
+    n_chunks = -(-per_dev // chunk)
+    return chunk, n_chunks, n_dev * n_chunks * chunk
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_fn(mesh, axis: str, n_chunks: int, chunk: int, statics_items):
+    """Compiled fleet sweep: shard_map over the seed axis of an outer
+    ``lax.map`` over chunks of the vmapped episode.
+
+    The lru_cache plays the role of jit's cache for the mesh/chunk-grid
+    statics; the episode statics are closed over, so the period step still
+    traces exactly once per (policy, scenario, warm) combination no matter
+    how many fleet calls run.  Input buffers (arrivals, counts, key data) are
+    donated -- together with XLA's in-place reuse of the scan carry this
+    keeps peak memory at O(chunk) episode state plus the requested outputs.
+    """
+    statics = dict(statics_items)
+
+    def episode(arrivals, counts, key_data):
+        # Keys travel as raw uint32 key data: typed PRNG key arrays predate
+        # stable shard_map support on the oldest JAX this repo carries.
+        return _episode_impl(arrivals, counts,
+                             jax.random.wrap_key_data(key_data), **statics)
+
+    def device_fn(arrivals, counts, key_data):
+        def chunk_fn(args):
+            return jax.vmap(episode)(*args)
+
+        def to_chunks(x):
+            return x.reshape((n_chunks, chunk) + x.shape[1:])
+
+        out = jax.lax.map(
+            chunk_fn, (to_chunks(arrivals), to_chunks(counts),
+                       to_chunks(key_data)))
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((n_chunks * chunk,) + x.shape[2:]), out)
+
+    spec = P(axis)
+    fn = compat.shard_map_unchecked(
+        device_fn, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec)
+    # Keys are excluded from donation: no uint32 output ever reuses them, so
+    # donating would only emit a "not usable" warning per call.
+    return jax.jit(fn, donate_argnums=(0, 1))
+
+
+def run_fleet(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None,
+              *, mesh=None, chunk_size: int | None = None) -> dict:
+    """Device-sharded, memory-bounded Monte-Carlo sweep over ``seeds``.
+
+    The fleet's seed axis is split across a one-axis device mesh (default:
+    ``launch.mesh.make_fleet_mesh()`` over every visible device), and each
+    device walks its local batch in chunks of ``chunk_size`` episodes
+    (default ``FLEET_CHUNK``) via an outer ``lax.map``, so the episode
+    *working set* (solver intermediates, scan carry) is O(chunk) regardless
+    of fleet size -- 10k+ episodes per call.  What remains O(fleet) is only
+    the requested output: with ``collect_history=True`` that includes the
+    (S, T) history arrays themselves; ``collect_history=False`` sweeps
+    return per-seed scalars only and never materialize any (S, T) array.
+
+    Invariants (tests/test_fleet.py): per-seed outputs are bitwise identical
+    to ``run_batch``/``run_scan`` under every mesh size, chunk size, and
+    fleet-size remainder, and the per-period allocation step traces exactly
+    once.  Returns the ``run_batch`` summary dict plus a ``"fleet"`` record
+    of the sweep geometry.
+    """
+    net = net or _default_net(cfg)
+    seeds = [int(s) for s in seeds]
+    if not seeds:
+        raise ValueError("run_fleet needs at least one seed")
+    if mesh is None:
+        mesh = mesh_lib.make_fleet_mesh()
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"run_fleet shards over a one-axis mesh, got axes "
+            f"{mesh.axis_names}")
+    axis = mesh.axis_names[0]
+    n_dev = mesh.shape[axis]
+    n_seeds = len(seeds)
+    chunk, n_chunks, padded_to = _fleet_shape(n_seeds, n_dev, chunk_size)
+    # Pad with repeats of the last seed: identical shapes on every device;
+    # the pad episodes' outputs are sliced off (on device) before transfer.
+    padded = seeds + [seeds[-1]] * (padded_to - n_seeds)
+    keys = _episode_keys(padded)
+    arrivals, counts = _draws(keys, **_draw_statics(cfg, net))
+    statics = _episode_statics(cfg, net, _k_cap(cfg))
+    fn = _fleet_fn(mesh, axis, n_chunks, chunk, tuple(statics.items()))
+    rounds_done, duration, hist = jax.tree_util.tree_map(
+        lambda x: x[:n_seeds],
+        fn(arrivals, counts, jax.random.key_data(keys)),
+    )
+    out = _summarize_batch(cfg, seeds, rounds_done, duration, hist)
+    out["fleet"] = {"n_devices": n_dev, "mesh_axis": axis, "chunk": chunk,
+                    "n_chunks": n_chunks, "padded_to": padded_to}
     return out
 
 
@@ -441,7 +626,19 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
             "rounds_done": [0] * cfg.n_services_total,
             "duration": [0] * cfg.n_services_total,
             "history": [],
+            "draw_stream": DRAW_STREAM,
         }
+    elif state["period"] > 0 and state.get("draw_stream") != DRAW_STREAM:
+        # Arrivals/counts are re-derived from cfg.seed on resume, so a
+        # snapshot written under a different episode-static draw stream
+        # (e.g. the pre-fleet host-NumPy stream) would silently continue
+        # with different arrival periods than the ones that produced its
+        # rounds_done/duration.  Refuse instead.
+        raise ValueError(
+            f"resume state was written under draw stream "
+            f"{state.get('draw_stream')!r}, this engine draws "
+            f"{DRAW_STREAM!r} -- the checkpoint's arrivals cannot be "
+            f"reconstructed; restart the episode")
 
     period = state["period"]
     rounds_done = list(state["rounds_done"])
@@ -481,6 +678,7 @@ def run(cfg: SimConfig, net: network.NetworkConfig | None = None,
     def _snapshot() -> dict:
         return {"period": period, "rounds_done": rounds_done,
                 "duration": duration, "history": history,
+                "draw_stream": DRAW_STREAM,
                 "chan_state": _scenario_state_to_json(chan_state),
                 "churn_state": _scenario_state_to_json(churn_state),
                 "pol_state": _scenario_state_to_json(pol_state)}

@@ -7,7 +7,21 @@ smoke tests must keep seeing 1 device.
 """
 from __future__ import annotations
 
-from repro.compat import AxisType, make_mesh
+from repro.compat import AxisType, flat_mesh, make_mesh
+
+FLEET_AXIS = "seeds"
+
+
+def make_fleet_mesh(n_devices: int | None = None):
+    """One-axis mesh over the seed dimension for Monte-Carlo episode sweeps.
+
+    ``fl.simulator.run_fleet`` shards its fleet of episodes over this axis;
+    defaults to every visible device (8 under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, a full pod slice
+    in production).  Routed through ``compat.flat_mesh`` so fleet sweeps and
+    ``disba_sharded`` share one mesh-construction path.
+    """
+    return flat_mesh(n_devices, axis_name=FLEET_AXIS)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -20,8 +20,10 @@ from ``fl.simulator.SimConfig`` by name or parameterized ``spec``:
 
 Channel and churn processes share the pure signature
 ``step(key, state, svc) -> (state', svc')`` with their state threaded
-through the scan carry; arrival processes are episode-static NumPy samplers.
-See ``base`` for the registry contract and EXPERIMENTS.md for the catalogue.
+through the scan carry; arrival processes are episode-static device-side
+samplers ``draw(key, n, mean_interval)``, vmapped over seeds by the
+simulator so fleet setup is one compiled dispatch.  See ``base`` for the
+registry contract and EXPERIMENTS.md for the catalogue.
 """
 from __future__ import annotations
 
@@ -47,5 +49,5 @@ def get_churn(sp, net) -> Process:
 
 
 def get_arrival(sp):
-    """Build an arrival sampler ``draw(rng, n, mean_interval)``."""
+    """Build an arrival sampler ``draw(key, n, mean_interval)``."""
     return get_process("arrival", as_spec(sp, default="poisson"))

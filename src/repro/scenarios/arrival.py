@@ -1,42 +1,50 @@
 """Arrival scenario processes: when each FL service enters the network.
 
-Episode-static NumPy samplers ``draw(rng, n, mean_interval) -> int64 (n,)``
-of non-decreasing arrival periods, consumed by the simulator's
-``_static_draws`` before compilation (arrival times are data to the compiled
-episode, so these never touch the jit cache).
+Episode-static *device-side* samplers ``draw(key, n, mean_interval) ->
+int32 (n,)`` of non-decreasing arrival periods.  Each sampler is a pure,
+traceable jax function of a PRNG key, so the simulator's ``_static_draws``
+can vmap one compiled draw over a whole fleet of seeds (O(1) dispatches for
+any fleet size) instead of looping a host RNG per seed; ``n`` is static.
+Arrival times are still *data* to the compiled episode -- the draw happens
+once per episode, outside the period scan.
 
 * ``poisson``  -- exponential inter-arrival gaps (the paper's §VI.D process
-  and the default; identical RNG stream to the pre-scenario engine).
+  and the default).
 * ``periodic`` -- deterministic arrivals every ``mean_interval`` periods
-  (the zero-variance baseline of an arrival sweep).
+  (the zero-variance baseline of an arrival sweep; consumes no randomness).
 * ``batched``  -- services arrive in simultaneous groups of ``group`` with
   exponential gaps between groups (flash-crowd onboarding).
 * ``mmpp``     -- 2-state Markov-modulated Poisson process: a *burst* state
   draws gaps ``burst`` times shorter than the mean, a *calm* state
   compensates so the long-run rate stays ~1/mean_interval; ``stay`` is the
   per-arrival probability of remaining in the current state.  This is the
-  bursty-demand stressor (cf. arXiv:2011.12469's time-varying loads).
+  bursty-demand stressor (cf. arXiv:2011.12469's time-varying loads).  The
+  per-arrival state chain is a ``lax.scan`` over per-step subkeys, so the
+  sampler stays a single traceable draw.
 """
 from __future__ import annotations
 
-import numpy as np
+import jax
+import jax.numpy as jnp
 
 from repro.scenarios.base import register
 
 
 @register("arrival", "poisson")
 def poisson():
-    def draw(rng, n, mean_interval):
-        gaps = rng.exponential(mean_interval, size=n)
-        return np.floor(np.cumsum(gaps)).astype(np.int64)
+    def draw(key, n, mean_interval):
+        gaps = jax.random.exponential(key, (n,), jnp.float32) * mean_interval
+        return jnp.floor(jnp.cumsum(gaps)).astype(jnp.int32)
 
     return draw
 
 
 @register("arrival", "periodic")
 def periodic():
-    def draw(rng, n, mean_interval):
-        return np.floor(np.arange(n, dtype=np.float64) * mean_interval).astype(np.int64)
+    def draw(key, n, mean_interval):
+        del key  # deterministic
+        return jnp.floor(
+            jnp.arange(n, dtype=jnp.float32) * mean_interval).astype(jnp.int32)
 
     return draw
 
@@ -47,11 +55,12 @@ def batched(group: int = 3):
     if group < 1:
         raise ValueError(f"group must be >= 1, got {group}")
 
-    def draw(rng, n, mean_interval):
+    def draw(key, n, mean_interval):
         n_groups = -(-n // group)
-        gaps = rng.exponential(mean_interval * group, size=n_groups)
-        starts = np.floor(np.cumsum(gaps)).astype(np.int64)
-        return np.repeat(starts, group)[:n]
+        gaps = jax.random.exponential(
+            key, (n_groups,), jnp.float32) * (mean_interval * group)
+        starts = jnp.floor(jnp.cumsum(gaps)).astype(jnp.int32)
+        return jnp.repeat(starts, group)[:n]
 
     return draw
 
@@ -65,15 +74,21 @@ def mmpp(burst: float = 6.0, stay: float = 0.7):
     if not 0.0 <= stay < 1.0:
         raise ValueError(f"stay must be in [0, 1), got {stay}")
 
-    def draw(rng, n, mean_interval):
+    def draw(key, n, mean_interval):
         # Equal-occupancy two-state chain; state means average to mean_interval.
-        means = (mean_interval / burst, mean_interval * (2.0 - 1.0 / burst))
-        state = int(rng.integers(2))
-        gaps = np.empty(n, dtype=np.float64)
-        for i in range(n):
-            gaps[i] = rng.exponential(means[state])
-            if rng.random() >= stay:
-                state = 1 - state
-        return np.floor(np.cumsum(gaps)).astype(np.int64)
+        means = jnp.array(
+            [mean_interval / burst, mean_interval * (2.0 - 1.0 / burst)],
+            jnp.float32)
+        key_s0, key_steps = jax.random.split(key)
+        state0 = jax.random.bernoulli(key_s0).astype(jnp.int32)
+
+        def step(state, k):
+            k_gap, k_flip = jax.random.split(k)
+            gap = jax.random.exponential(k_gap, dtype=jnp.float32) * means[state]
+            flip = jax.random.uniform(k_flip) >= stay
+            return jnp.where(flip, 1 - state, state), gap
+
+        _, gaps = jax.lax.scan(step, state0, jax.random.split(key_steps, n))
+        return jnp.floor(jnp.cumsum(gaps)).astype(jnp.int32)
 
     return draw

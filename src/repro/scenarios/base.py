@@ -15,10 +15,12 @@ workload.  Two kinds exist:
   must keep the (N, K) shapes of ``svc`` so activity stays a mask flip and
   the compiled period step never retraces.
 
-* **Arrival processes** (kind ``"arrival"``) are episode-static NumPy
-  samplers ``draw(rng, n, mean_interval) -> int64 (n,)`` of non-decreasing
-  arrival periods, consumed by the simulator's ``_static_draws`` before
-  compilation.
+* **Arrival processes** (kind ``"arrival"``) are episode-static device-side
+  samplers ``draw(key, n, mean_interval) -> int32 (n,)`` of non-decreasing
+  arrival periods (``n`` static, ``key`` a jax PRNG key).  They are pure and
+  vmappable, so the simulator's ``_static_draws`` batches one compiled draw
+  over a whole fleet of seeds; arrival times remain data to the compiled
+  episode.
 
 Processes are registered under string keys per kind (mirroring
 ``core.policy``) and selected by a hashable ``ScenarioSpec`` so specs can be
@@ -97,7 +99,7 @@ def register(kind: str, name: str):
 
     Channel/churn factories take keyword parameters (plus the context kwarg
     ``net`` if they need the NetworkConfig) and return a ``Process``; arrival
-    factories return the ``draw(rng, n, mean_interval)`` callable.
+    factories return the ``draw(key, n, mean_interval)`` callable.
     """
     if kind not in _REGISTRIES:
         raise ValueError(f"unknown scenario kind {kind!r}; expected one of {KINDS}")

@@ -1,12 +1,36 @@
 """Benchmark-harness tests: roofline composition math, collective-byte HLO
-parsing, the per-period policy ordering that Figs. 11-12 rely on, and
-MODEL_FLOPS sanity for dense vs MoE archs."""
+parsing, the per-period policy ordering that Figs. 11-12 rely on,
+MODEL_FLOPS sanity for dense vs MoE archs, and schema validation of the
+committed repo-root BENCH_*.json trajectory artifacts."""
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from benchmarks import roofline
 from repro.launch.dryrun import collective_bytes, _shape_bytes
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("artifact,validator_module", [
+    ("BENCH_allocation.json", "bench_allocation"),
+    ("BENCH_fleet.json", "bench_fleet"),
+])
+def test_committed_bench_artifacts_validate(artifact, validator_module):
+    """The repo-root bench trajectory must stay machine-reconstructable:
+    every committed artifact parses, passes its schema checker, and carries
+    the commit/date/backend provenance stamp."""
+    import importlib
+
+    mod = importlib.import_module(f"benchmarks.{validator_module}")
+    with open(os.path.join(_REPO_ROOT, artifact)) as fp:
+        data = json.load(fp)
+    mod.validate(data)
+    assert data["tiny"] is False, f"{artifact} must be a full-size run"
 
 
 def test_shape_bytes_parser():

@@ -101,6 +101,77 @@ def test_disba_sharded_single_device(scenario):
     np.testing.assert_allclose(np.asarray(res.b), np.asarray(ref.b), rtol=1e-4, atol=1e-5)
 
 
+def _pad_to_multiple(svc, multiple: int):
+    """Append all-masked rows until n_services divides ``multiple`` (the
+    fixed-capacity pad convention: empty rows demand zero bandwidth)."""
+    from repro.core.types import ServiceSet
+
+    extra = -svc.n_services % multiple
+    if extra == 0:
+        return svc
+    z = jnp.zeros((extra, svc.alpha.shape[1]), svc.alpha.dtype)
+    return ServiceSet(
+        alpha=jnp.concatenate([svc.alpha, z]),
+        t_comp=jnp.concatenate([svc.t_comp, z]),
+        mask=jnp.concatenate([svc.mask, jnp.zeros(z.shape, bool)]),
+    )
+
+
+def test_disba_sharded_default_mesh_via_compat(scenario):
+    """mesh=None builds the mesh through compat.flat_mesh -- the same
+    construction path run_fleet uses -- and must match the explicit mesh.
+    Padded to the visible device count so the test holds on any host."""
+    from repro.compat import flat_mesh
+
+    svc, B = scenario
+    svc = _pad_to_multiple(svc, jax.device_count())
+    res = disba.disba_sharded(None, svc, B)
+    ref = disba.disba_sharded(flat_mesh(axis_name="data"), svc, B)
+    np.testing.assert_array_equal(np.asarray(res.b), np.asarray(ref.b))
+    with pytest.raises(ValueError, match="one-axis"):
+        disba.disba_sharded(None, svc, B, axis_names=("a", "b"))
+
+
+def test_disba_sharded_masked_padded_matches_dense(scenario):
+    """All-masked pad rows (the fixed-capacity convention) demand zero
+    bandwidth, so a padded sharded solve equals the dense reference on the
+    real rows and allocates exactly nothing to the pads."""
+    from repro.core.types import ServiceSet, mask_inactive
+
+    svc, B = scenario
+    n = svc.n_services
+    padded = _pad_to_multiple(
+        ServiceSet(
+            alpha=jnp.concatenate([svc.alpha, jnp.zeros_like(svc.alpha)]),
+            t_comp=jnp.concatenate([svc.t_comp, jnp.zeros_like(svc.t_comp)]),
+            mask=jnp.concatenate([svc.mask, jnp.zeros_like(svc.mask)]),
+        ),
+        jax.device_count(),
+    )
+    pad = padded.n_services
+    assert pad >= 2 * n
+    res = disba.disba_sharded(None, padded, B)
+    ref = disba.solve_lambda_bisect(svc, B)
+    np.testing.assert_allclose(np.asarray(res.b)[:n], np.asarray(ref.b),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(res.b)[n:], 0.0)
+    np.testing.assert_array_equal(np.asarray(res.f)[n:], 0.0)
+    # masking out live rows mid-set behaves the same way
+    keep = jnp.arange(pad) != 1
+    masked = mask_inactive(padded, keep)
+    sub = ServiceSet(
+        alpha=jnp.concatenate([svc.alpha[:1], svc.alpha[2:]]),
+        t_comp=jnp.concatenate([svc.t_comp[:1], svc.t_comp[2:]]),
+        mask=jnp.concatenate([svc.mask[:1], svc.mask[2:]]),
+    )
+    res_m = disba.disba_sharded(None, masked, B)
+    ref_m = disba.solve_lambda_bisect(sub, B)
+    np.testing.assert_allclose(
+        np.asarray(res_m.b)[np.asarray(keep)][: n - 1],
+        np.asarray(ref_m.b), rtol=1e-4, atol=1e-5)
+    assert float(np.asarray(res_m.b)[1]) == 0.0
+
+
 MULTIDEV_SCRIPT = textwrap.dedent(
     """
     import os
@@ -117,6 +188,10 @@ MULTIDEV_SCRIPT = textwrap.dedent(
     ref = disba.solve_lambda_bisect(svc, B)
     np.testing.assert_allclose(np.asarray(res.b), np.asarray(ref.b), rtol=1e-3, atol=1e-4)
     np.testing.assert_allclose(float(jnp.sum(res.b)), B, rtol=1e-5)
+    # mesh=None routes through compat.flat_mesh over all 8 devices -- the
+    # same mesh-construction path as fl.simulator.run_fleet
+    res_auto = disba.disba_sharded(None, svc, B)
+    np.testing.assert_array_equal(np.asarray(res_auto.b), np.asarray(res.b))
     print("SHARDED-OK")
     """
 )

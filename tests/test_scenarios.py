@@ -7,6 +7,7 @@ checkpoint resume with every scenario process enabled."""
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -220,27 +221,40 @@ def test_gilbert_steady_state_availability():
 @pytest.mark.parametrize("name", ["poisson", "periodic", "batched", "mmpp"])
 def test_arrival_samplers_are_sane(name):
     draw = scenarios.get_arrival(name)
-    rng = np.random.default_rng(0)
-    arr = draw(rng, 50, 4.0)
-    assert arr.shape == (50,) and arr.dtype == np.int64
+    arr = np.asarray(draw(jax.random.key(0), 50, 4.0))
+    assert arr.shape == (50,) and np.issubdtype(arr.dtype, np.integer)
     assert np.all(arr >= 0) and np.all(np.diff(arr) >= 0)
 
 
-def test_poisson_arrivals_match_pre_scenario_stream():
-    """The default sampler consumes the exact RNG stream of the pre-scenario
-    engine, keeping every seed's episode reproducible across the refactor."""
-    draw = scenarios.get_arrival("poisson")
-    arr = draw(np.random.default_rng(3), 10, 5.0)
-    rng = np.random.default_rng(3)
-    expected = np.floor(np.cumsum(rng.exponential(5.0, size=10))).astype(np.int64)
+def test_poisson_arrivals_match_engine_stream():
+    """The default sampler is the exact device-side stream of the simulator's
+    batched static draws: cumulative exponential gaps off the episode key,
+    so every seed's episode is reproducible from the sampler alone."""
+    key = jax.random.key(3)
+    arr = np.asarray(scenarios.get_arrival("poisson")(key, 10, 5.0))
+    gaps = jax.random.exponential(key, (10,), jnp.float32) * 5.0
+    expected = np.floor(np.cumsum(np.asarray(gaps))).astype(arr.dtype)
     np.testing.assert_array_equal(arr, expected)
 
 
+def test_arrival_samplers_vmap_bitwise_equals_per_key():
+    """Batched (vmapped) draws are bitwise identical to per-key draws -- the
+    invariant that lets run_fleet set up 10k episodes in one dispatch."""
+    keys = jax.vmap(jax.random.key)(jnp.arange(5, dtype=jnp.uint32))
+    for name in scenarios.available("arrival"):
+        draw = scenarios.get_arrival(name)
+        batched = jax.vmap(lambda k: draw(k, 12, 3.0))(keys)
+        for i in range(5):
+            np.testing.assert_array_equal(
+                np.asarray(batched[i]), np.asarray(draw(keys[i], 12, 3.0)),
+                err_msg=f"{name}: vmapped draw drifted from per-key draw")
+
+
 def test_periodic_and_batched_arrivals_structure():
-    assert list(scenarios.get_arrival("periodic")(
-        np.random.default_rng(0), 4, 2.5)) == [0, 2, 5, 7]
-    arr = scenarios.get_arrival(scenarios.spec("batched", group=3))(
-        np.random.default_rng(0), 7, 2.0)
+    assert list(np.asarray(scenarios.get_arrival("periodic")(
+        jax.random.key(0), 4, 2.5))) == [0, 2, 5, 7]
+    arr = np.asarray(scenarios.get_arrival(scenarios.spec("batched", group=3))(
+        jax.random.key(0), 7, 2.0))
     assert arr[0] == arr[1] == arr[2] and arr[3] == arr[4] == arr[5]
 
 
@@ -248,9 +262,9 @@ def test_mmpp_is_burstier_than_poisson():
     """Squared coefficient of variation of inter-arrival gaps: ~1 for the
     Poisson process, clearly above 1 for the 2-state MMPP."""
     def cv2(name_or_spec, seed=0, n=4000):
-        rng = np.random.default_rng(seed)
         draw = scenarios.get_arrival(name_or_spec)
-        gaps = np.diff(draw(rng, n, 10.0).astype(np.float64))
+        gaps = np.diff(np.asarray(draw(jax.random.key(seed), n, 10.0),
+                                  dtype=np.float64))
         return gaps.var() / gaps.mean() ** 2
 
     assert cv2("poisson") < 1.3

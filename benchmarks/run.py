@@ -16,7 +16,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: tables,static,longterm,scale,"
-                         "allocation,fleet,roofline")
+                         "allocation,fleet,cotrain,roofline")
     ap.add_argument("--full", action="store_true",
                     help="paper-sized long-term sims (slow)")
     args = ap.parse_args()
@@ -38,8 +38,8 @@ def main() -> None:
                   flush=True)
 
     from benchmarks import (allocator_scale, bench_allocation, bench_fleet,
-                            paper_figs_longterm, paper_figs_static,
-                            paper_tables, roofline)
+                            paper_figs_cotrain, paper_figs_longterm,
+                            paper_figs_static, paper_tables, roofline)
 
     section("tables", paper_tables.run)
     section("static", paper_figs_static.run)
@@ -47,6 +47,7 @@ def main() -> None:
     section("scale", allocator_scale.run)
     section("allocation", lambda: bench_allocation.run_rows(tiny=not args.full))
     section("fleet", lambda: bench_fleet.run_rows(tiny=not args.full))
+    section("cotrain", lambda: paper_figs_cotrain.run_rows(tiny=not args.full))
     section("roofline", roofline.run)
     if failures:
         sys.exit(1)

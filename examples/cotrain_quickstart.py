@@ -1,0 +1,76 @@
+"""Co-training quickstart: allocation-paced FedAvg, accuracy vs wall-clock.
+
+Couples the multi-period bandwidth simulator to real federated training
+(`repro.fl.cotrain`): two allocation policies pace the *same* arriving FL
+services (same seeds, channels, arrivals), each service carries a real
+model through the episode, and the printout compares the accuracy each
+policy buys per simulated second.  Finishes with the live FLService
+bookkeeping and checkpoints the co-trained per-service models with the
+fault-tolerant CheckpointManager.
+
+  PYTHONPATH=src python examples/cotrain_quickstart.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import network
+from repro.fl import cotrain, simulator
+
+SEEDS = [0, 1]
+
+# A scarce band (2 MHz) and compute-bounded clients: the allocator decides
+# the training pace, and the per-period round grant stays under the cap.
+net = network.NetworkConfig(total_bandwidth_mhz=2.0, period_s=4.0,
+                            mean_clients=10.0, var_clients=12.0,
+                            t_local_lo=0.15, t_local_hi=0.3)
+train = cotrain.TrainSpec(vocab=32, seq_len=8, batch_size=4, eval_batch=32,
+                          rounds_cap=14, client_lr=0.5)
+
+print(f"{len(SEEDS)} seeds, 4 services, 36 FedAvg rounds each, "
+      f"B={net.total_bandwidth_mhz} MHz, period={net.period_s}s\n")
+
+results = {}
+for pol in ("coop", "es"):
+    cfg = simulator.SimConfig(policy=pol, n_services_total=4,
+                              rounds_required=36, p_arrive=1.0,
+                              max_periods=50, k_max=26,
+                              mean_clients=10.0, var_clients=12.0)
+    results[pol] = cotrain.run_cotrain_batch(cfg, train, SEEDS, net)
+
+print(f"{'time [s]':>9s} | " + " | ".join(f"{p:>10s} acc" for p in results))
+time_s = results["coop"]["time_s"]
+acc = {p: np.asarray(r["history"]["acc"]).mean(axis=(0, 2))
+       for p, r in results.items()}
+for t in range(3, len(time_s), 4):
+    print(f"{time_s[t]:9.0f} | "
+          + " | ".join(f"{acc[p][t]:14.3f}" for p in results))
+
+print("\nper-policy summary:")
+for pol, out in results.items():
+    print(f"  {pol:5s} avg_duration={float(np.mean(out['avg_duration'])):.2f} "
+          f"periods, clipped_rounds={int(np.sum(out['clipped_rounds']))}, "
+          f"finished={bool(np.all(out['finished']))}")
+
+print("\nFLService bookkeeping (coop, seed 0) -- driven by the episode:")
+for svc in results["coop"]["services"][0]:
+    print(f"  service {svc.service_id}: {svc.n_clients} clients, arrived "
+          f"period {svc.arrived_period}, {svc.rounds_done}/"
+          f"{svc.rounds_required} rounds over {svc.periods_active} periods, "
+          f"finished={svc.finished}")
+
+# The co-trained models are the product: checkpoint the stacked per-service
+# params (seed 0) with the crash-safe manager.
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    mgr = CheckpointManager(ckpt_dir, keep=1)
+    out = results["coop"]
+    params0 = np.asarray(out["params"])[0]
+    step = int(out["periods"][0])
+    mgr.save(step, {"bigram_table": params0},
+             extra={"policy": "coop", "durations":
+                    [int(d) for d in out["durations"][0]]})
+    restored, extra = mgr.restore(step, {"bigram_table": params0})
+    assert np.array_equal(restored["bigram_table"], params0)
+    print(f"\ncheckpointed co-trained params at period {step} "
+          f"(policy={extra['policy']}) and restored bit-exact")

@@ -128,6 +128,28 @@ def client_split_fn(
                      f"expected one of {INTRA_BACKENDS}")
 
 
+def round_time_fn(
+    intra_backend: str = "reference", iters: int = BISECT_ITERS
+) -> Callable[[ServiceSet, jax.Array], jax.Array]:
+    """Optimal round time t*_n(b_n) with the chosen backend ((N,) seconds;
+    +inf for b <= 0 rows).  The co-simulation derives per-round straggler
+    deadlines from this -- same solver family as the allocation itself, so
+    the deadline is consistent with the allocated latencies."""
+    if intra_backend == "reference":
+        return lambda svc, b: intra.solve_round_time(svc, b, iters)
+    if intra_backend == "pallas":
+
+        def _t(svc: ServiceSet, b: jax.Array) -> jax.Array:
+            t_star, _ = _pallas_solve(svc, b, iters)
+            # kernel reports t* ~ 1/TINY for b <= 0 rows; map those to +inf
+            return jnp.where(
+                jnp.logical_and(b > 0.0, t_star < 1e20), t_star, jnp.inf)
+
+        return _t
+    raise ValueError(f"unknown intra backend {intra_backend!r}; "
+                     f"expected one of {INTRA_BACKENDS}")
+
+
 # ---------------------------------------------------------------------------
 # Registry.
 # ---------------------------------------------------------------------------

@@ -2,7 +2,8 @@
 real architectures), client local training, FedAvg/FedProx servers with
 straggler mitigation, uplink gradient compression (feeds the allocator's
 s^UT), and the multi-period wall-clock simulator behind Figs. 11-15."""
-from repro.fl.service import FLService, arch_service_tuple  # noqa: F401
+from repro.fl.service import (FLService, arch_service_tuple,  # noqa: F401
+                              episode_services)
 from repro.fl.client import local_update  # noqa: F401
 from repro.fl.server import fedavg_round, make_fl_round_step  # noqa: F401
-from repro.fl import compression, simulator  # noqa: F401
+from repro.fl import compression, cotrain, simulator  # noqa: F401

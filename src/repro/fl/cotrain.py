@@ -1,0 +1,516 @@
+"""Training-in-the-loop co-simulation: allocation-paced FedAvg.
+
+The paper's evaluation compares allocation policies by what they do to
+*learning* -- FL accuracy against wall-clock time (Figs. 16-17) -- not just
+by round counts.  This module couples the repo's two halves end-to-end: the
+fixed-capacity multi-period simulator (``fl.simulator``) paces REAL FedAvg
+training (``fl.server.make_fl_round_step``), so every simulated period
+
+  1. runs the *identical* allocation step as the duration engines
+     (``simulator._period_step`` -- same RNG stream, same scenario carries,
+     same ``AllocationPolicy`` registry incl. warm starts), then
+  2. converts the period's allocation into training pace: the allocated
+     per-client water-filling split gives each client a DT+LC+UT latency,
+     clients past ``deadline_x`` times the optimal round time are dropped as
+     stragglers (on top of scenario churn, which already masked them out of
+     the ServiceSet; note the *optimal* split equalizes admitted latencies
+     at exactly the round time, so under it the deadline is all-or-nothing
+     per service -- ``deadline_x >= 1`` is a guard band admitting every
+     churn survivor, ``deadline_x < 1`` models a hard budget below the
+     optimum and freezes the service; partial participation loss enters
+     through churn, which removes clients *before* the split), and each
+     active service advances exactly the simulated number of FedAvg rounds
+     (bounded by the static ``rounds_cap``; the shortfall is *counted*,
+     never silent), and
+  3. evaluates every service's model, accumulating per-service loss/accuracy
+     curves against the cumulative allocated wall-clock.
+
+The coupling is strictly one-way by construction: training reads the
+allocation extras that ``_period_step`` already computed and writes nothing
+back, so the duration stream of a co-trained episode is **bitwise identical**
+to ``run_scan`` on the same config (pinned per policy in
+tests/test_cotrain.py).  Like the duration engines, the whole episode is one
+``jax.lax.scan`` (the allocation step traces exactly once per
+policy x scenario combo -- ``simulator.trace_count()``), ``run_cotrain_batch``
+vmaps it over seeds, and ``run_cotrain_fleet`` shards it over a one-axis
+device mesh in memory-bounded chunks for Monte-Carlo accuracy bands.
+
+Train tasks
+-----------
+
+What trains is selected by a hashable ``TrainSpec`` (a jit static):
+
+* ``task="bigram"`` -- a (V, V) bigram-logit table fit to ``data.SyntheticLM``
+  sequences by cross-entropy.  One embedding lookup per step: cheap enough
+  that thousands of simulated rounds run in one compiled episode, while
+  still having real signal (the chain is learnable) and a real accuracy
+  (next-token argmax).  The default for tests, goldens, and paper figures.
+* ``task="zoo"`` -- a smoke-scaled architecture from ``repro.configs``
+  (``arch=`` zoo key, decoder-only or xLSTM families), trained on
+  ``SyntheticLM`` at its own vocab size.  The CI smoke path.
+
+Every service carries its own stacked copy of the model parameters through
+the scan; per-service data streams are disjoint slices of the client-id
+space, and model inits fold ``scenarios.base.COTRAIN_SALT`` into the episode
+key -- a stream no other consumer reads, so co-training cannot perturb the
+simulator's draws.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import scenarios
+from repro.core import network, policy as policy_mod
+from repro.data import SyntheticLM
+from repro.fl import server as fl_server
+from repro.fl import service as fl_service
+from repro.fl import simulator
+from repro.models import registry as model_registry
+from repro.scenarios.base import COTRAIN_SALT
+
+# Disjoint client-id stripes per service slot inside one SyntheticLM stream;
+# the eval stream uses the top id of each stripe (training uses 0..k_max-1,
+# k_max is always far below the stripe width).
+_SVC_STRIDE = 1 << 20
+_EVAL_CLIENT = _SVC_STRIDE - 1
+# Eval batches sit at a step index no training round ever reaches
+# (training steps are round * local_steps + e, rounds < rounds_required).
+_EVAL_STEP = (1 << 30) + 7
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """Hashable (jit-static) description of what trains during an episode.
+
+    ``rounds_cap`` is the static per-period bound on *executed* training
+    rounds; the simulated round count is never altered by it -- periods whose
+    allocation grants more rounds than the cap train ``rounds_cap`` rounds
+    and the shortfall is accumulated in the summary's ``clipped_rounds`` (a
+    sweep meant to be read as accuracy-vs-time should keep it at 0, e.g. by
+    shortening ``NetworkConfig.period_s``).  ``deadline_x`` scales the
+    straggler deadline off the optimal round time for the allocated
+    bandwidth; ``float("inf")`` disables straggler drop entirely.  Because
+    the optimal water-filling split equalizes admitted latencies at exactly
+    the round time, the deadline is all-or-nothing per service (see the
+    module docstring): values >= 1 admit everyone the churn process left,
+    values < 1 drop everyone.
+    """
+
+    task: str = "bigram"              # "bigram" | "zoo"
+    arch: str = "gemma3-1b"           # zoo entry (smoke-scaled) for task="zoo"
+    vocab: int = 32                   # bigram table / data vocab (task="bigram")
+    seq_len: int = 8
+    batch_size: int = 4
+    local_steps: int = 1
+    eval_batch: int = 16
+    client_lr: float = 0.5
+    server_lr: float = 1.0
+    prox_mu: float = 0.0
+    compression: str = "none"         # fl.compression key, feeds the round step
+    topk_frac: float = 0.01
+    deadline_x: float = 3.0
+    rounds_cap: int = 4
+    data_seed: int = 0
+    data_temperature: float = 0.3
+
+    def __post_init__(self):
+        if self.rounds_cap < 1:
+            raise ValueError(f"rounds_cap must be >= 1, got {self.rounds_cap}")
+        if self.local_steps < 1:
+            raise ValueError(
+                f"local_steps must be >= 1, got {self.local_steps}")
+        if not self.deadline_x > 0:
+            raise ValueError(
+                f"deadline_x must be positive, got {self.deadline_x}")
+
+
+class _Task:
+    """Bundle the episode needs from a TrainSpec: per-service ``init(key)``,
+    the jitted-together FedAvg ``round_step``, a ``batch_fn(svc_id, round)``
+    producing the (C, E, ...) client batches, and ``eval_fn(params, svc_id)
+    -> (loss, accuracy)`` on the service's held-out stream."""
+
+    def __init__(self, init, round_step, batch_fn, eval_fn):
+        self.init = init
+        self.round_step = round_step
+        self.batch_fn = batch_fn
+        self.eval_fn = eval_fn
+
+
+def _eval_metrics(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                   .astype(jnp.float32))
+    return -jnp.mean(ll), acc
+
+
+def _stacked_batches(data: SyntheticLM, spec: TrainSpec, svc_id, round_idx,
+                     k_max: int):
+    """(C, E, B, S) client batches for one service's round: every client
+    slot gets its own deterministic stream (masked slots are still computed
+    -- their weight is 0 -- so shapes stay fixed)."""
+
+    def one_client(c):
+        per_step = [
+            data.batch(round_idx * spec.local_steps + e, spec.batch_size,
+                       client_id=svc_id * _SVC_STRIDE + c)
+            for e in range(spec.local_steps)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+
+    return jax.vmap(one_client)(jnp.arange(k_max, dtype=jnp.int32))
+
+
+def _bigram_task(spec: TrainSpec, k_max: int) -> _Task:
+    data = SyntheticLM(vocab_size=spec.vocab, seq_len=spec.seq_len,
+                       seed=spec.data_seed, temperature=spec.data_temperature)
+
+    def loss_fn(table, batch):
+        logits = table[batch["tokens"]]
+        logp = jax.nn.log_softmax(logits)
+        ll = jnp.take_along_axis(logp, batch["labels"][..., None],
+                                 axis=-1)[..., 0]
+        return -jnp.mean(ll)
+
+    def init(key):
+        return 0.01 * jax.random.normal(
+            key, (spec.vocab, spec.vocab), jnp.float32)
+
+    round_step = fl_server.make_fl_round_step(
+        loss_fn, local_steps=spec.local_steps, client_lr=spec.client_lr,
+        server_lr=spec.server_lr, prox_mu=spec.prox_mu,
+        compression=spec.compression, topk_frac=spec.topk_frac)
+
+    def batch_fn(svc_id, round_idx):
+        return _stacked_batches(data, spec, svc_id, round_idx, k_max)
+
+    def eval_fn(table, svc_id):
+        batch = data.batch(_EVAL_STEP, spec.eval_batch,
+                           client_id=svc_id * _SVC_STRIDE + _EVAL_CLIENT)
+        return _eval_metrics(table[batch["tokens"]], batch["labels"])
+
+    return _Task(init, round_step, batch_fn, eval_fn)
+
+
+def _zoo_task(spec: TrainSpec, k_max: int) -> _Task:
+    from repro import configs
+
+    cfg = configs.get_smoke_config(spec.arch)
+    if cfg.family == "encdec":
+        raise ValueError(
+            f"zoo co-training supports decoder-only/ssm families; "
+            f"{spec.arch!r} is encoder-decoder (needs modality frontends)")
+    model = model_registry.build_model(cfg)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=spec.seq_len,
+                       seed=spec.data_seed, temperature=spec.data_temperature)
+
+    round_step = fl_server.make_fl_round_step(
+        model.loss, local_steps=spec.local_steps, client_lr=spec.client_lr,
+        server_lr=spec.server_lr, prox_mu=spec.prox_mu,
+        compression=spec.compression, topk_frac=spec.topk_frac)
+
+    def batch_fn(svc_id, round_idx):
+        return _stacked_batches(data, spec, svc_id, round_idx, k_max)
+
+    def eval_fn(params, svc_id):
+        batch = data.batch(_EVAL_STEP, spec.eval_batch,
+                           client_id=svc_id * _SVC_STRIDE + _EVAL_CLIENT)
+        logits = model.forward(params, batch["tokens"])[0]
+        return _eval_metrics(logits, batch["labels"])
+
+    return _Task(model.init, round_step, batch_fn, eval_fn)
+
+
+def _build_task(spec: TrainSpec, k_max: int) -> _Task:
+    if spec.task == "bigram":
+        return _bigram_task(spec, k_max)
+    if spec.task == "zoo":
+        return _zoo_task(spec, k_max)
+    raise ValueError(
+        f"unknown train task {spec.task!r}; expected 'bigram' or 'zoo'")
+
+
+# ---------------------------------------------------------------------------
+# The co-trained episode: one lax.scan, allocation step traced once.
+# ---------------------------------------------------------------------------
+
+_COTRAIN_STATICS = simulator._EPISODE_STATICS + ("train",)
+
+
+def _cotrain_episode_impl(arrivals, counts, key, *, train, policy, net,
+                          n_total, k_max, rounds_required, max_periods,
+                          n_bids, alpha_fair, intra_backend, warm_start,
+                          collect_history, channel, churn):
+    # -- identical construction to simulator._episode_impl: the allocation
+    # side of the scan must be indistinguishable from the duration engine.
+    pol = policy_mod.get_stateful_policy(
+        policy, warm_start=warm_start, n_bids=n_bids, alpha_fair=alpha_fair,
+        intra_backend=intra_backend,
+    )
+    chan_proc = scenarios.get_channel(channel, net)
+    churn_proc = scenarios.get_churn(churn, net)
+
+    # -- the training side: task closures + the allocated-latency model.
+    task = _build_task(train, k_max)
+    split_fn = policy_mod.client_split_fn(intra_backend)
+    time_fn = policy_mod.round_time_fn(intra_backend)
+    svc_ids = jnp.arange(n_total, dtype=jnp.int32)
+    k_init = jax.random.fold_in(key, COTRAIN_SALT)
+    params0 = jax.vmap(lambda i: task.init(jax.random.fold_in(k_init, i)))(
+        svc_ids)
+
+    def train_service(svc_id, params, first_round, n_rounds, weights):
+        """Advance one service ``n_rounds`` FedAvg rounds (static bound
+        ``rounds_cap``; skipped rounds are identity on params)."""
+
+        def body(p, r):
+            do = r < n_rounds
+            batches = task.batch_fn(svc_id, first_round + r)
+            new_p, metrics = task.round_step(p, batches, weights)
+            p = jax.tree.map(
+                lambda a, b: jnp.where(do, a, b), new_p, p)
+            return p, jnp.where(do, metrics["loss"], 0.0)
+
+        params, losses = jax.lax.scan(
+            body, params, jnp.arange(train.rounds_cap, dtype=jnp.int32))
+        mean_loss = jnp.sum(losses) / jnp.maximum(n_rounds, 1)
+        return params, mean_loss
+
+    def step(carry, period):
+        (rounds_done, duration, chan_state, churn_state, pol_state,
+         params, trained, clipped) = carry
+        prev_rounds = rounds_done
+        (rounds_done, duration, chan_state, churn_state, pol_state, stats,
+         ex) = simulator._period_step(
+            rounds_done, duration, chan_state, churn_state, pol_state,
+            period, arrivals, counts, key,
+            policy_fn=pol.step, chan_step=chan_proc.step,
+            churn_step=churn_proc.step, chan_rebuilds=chan_proc.rebuilds,
+            net=net, n_total=n_total, k_max=k_max,
+            rounds_required=rounds_required,
+        )
+        svc, b, f, active = ex["svc"], ex["b"], ex["f"], ex["active"]
+        # Rounds that actually count toward the episode (the same clamp the
+        # duration engine applies to rounds_done), then the executed subset.
+        eff = jnp.where(
+            active, jnp.minimum(ex["rounds"], rounds_required - prev_rounds),
+            0)
+        n_train = jnp.minimum(eff, train.rounds_cap)
+        clipped = clipped + jnp.sum(eff - n_train)
+        # Allocated per-client DT+LC+UT latency -> straggler weights.  The
+        # deadline anchors at the optimal round time for the allocated
+        # bandwidth; churned clients are already outside svc.mask.
+        t_round = time_fn(svc, b)
+        b_clients = split_fn(svc, b)
+        lat = svc.t_comp + svc.alpha / jnp.maximum(b_clients, 1e-30)
+        admitted = jnp.logical_and(
+            svc.mask, jnp.where(svc.mask, lat, jnp.inf)
+            <= train.deadline_x * t_round[:, None])
+        weights = admitted.astype(jnp.float32)
+        params, train_loss = jax.vmap(train_service)(
+            svc_ids, params, trained, n_train, weights)
+        trained = trained + n_train
+        ev_loss, ev_acc = jax.vmap(task.eval_fn)(params, svc_ids)
+        out = {
+            "loss": ev_loss, "acc": ev_acc, "train_loss": train_loss,
+            "b": b, "f": f, "active": active, "rounds": eff,
+            "trained": n_train,
+            # clients that actually trained this period: 0 when no round
+            # executed, else the admitted (deadline + churn survivors) count
+            "participants": jnp.where(
+                n_train > 0,
+                jnp.sum(weights, axis=-1).astype(jnp.int32), 0),
+            "freq_sum": stats["freq_sum"], "objective": stats["objective"],
+            "all_done": stats["all_done"],
+        }
+        carry = (rounds_done, duration, chan_state, churn_state, pol_state,
+                 params, trained, clipped)
+        return carry, out
+
+    init = (jnp.zeros((n_total,), jnp.int32), jnp.zeros((n_total,), jnp.int32),
+            chan_proc.init(key, n_total, k_max),
+            churn_proc.init(key, n_total, k_max),
+            pol.init_state(n_total), params0,
+            jnp.zeros((n_total,), jnp.int32), jnp.int32(0))
+    (rounds_done, duration, _, _, _, params, trained, clipped), hist = (
+        jax.lax.scan(step, init, jnp.arange(max_periods, dtype=jnp.int32)))
+    return rounds_done, duration, trained, clipped, params, hist
+
+
+_cotrain_episode = functools.partial(
+    jax.jit, static_argnames=_COTRAIN_STATICS)(_cotrain_episode_impl)
+
+
+@functools.partial(jax.jit, static_argnames=_COTRAIN_STATICS)
+def _cotrain_episode_batch(arrivals, counts, keys, *, train, **statics):
+    def one(a, c, k):
+        return _cotrain_episode_impl(a, c, k, train=train, **statics)
+
+    return jax.vmap(one)(arrivals, counts, keys)
+
+
+@functools.lru_cache(maxsize=None)
+def _cotrain_fleet_fn(mesh, axis: str, n_chunks: int, chunk: int,
+                      statics_items):
+    """Compiled co-training fleet sweep over ``simulator.sharded_chunked_fn``
+    (same mesh/chunk geometry and donation rules as ``run_fleet``)."""
+    statics = dict(statics_items)
+
+    def episode(arrivals, counts, key_data):
+        return _cotrain_episode_impl(
+            arrivals, counts, jax.random.wrap_key_data(key_data), **statics)
+
+    return simulator.sharded_chunked_fn(mesh, axis, n_chunks, chunk, episode)
+
+
+# ---------------------------------------------------------------------------
+# Entry points + summaries.
+# ---------------------------------------------------------------------------
+
+_CURVE_KEYS = ("loss", "acc", "train_loss", "b", "f", "active", "rounds",
+               "trained", "participants", "freq_sum", "objective")
+
+
+def _statics(cfg: simulator.SimConfig, train: TrainSpec,
+             net: network.NetworkConfig) -> dict:
+    return dict(train=train,
+                **simulator._episode_statics(cfg, net, simulator._k_cap(cfg)))
+
+
+def _summarize_episode(cfg: simulator.SimConfig,
+                       net: network.NetworkConfig, arrivals, counts,
+                       rounds_done, duration, trained, clipped, params,
+                       hist) -> dict:
+    duration = np.asarray(duration)
+    done = np.asarray(hist["all_done"])
+    periods = int(np.argmax(done)) + 1 if done.any() else cfg.max_periods
+    return {
+        "avg_duration": float(np.mean(duration)),
+        "std_duration": float(np.std(duration)),
+        "durations": [int(d) for d in duration],
+        "periods": periods,
+        "finished": bool(np.all(np.asarray(rounds_done)
+                                >= cfg.rounds_required)),
+        "trained_rounds": [int(t) for t in np.asarray(trained)],
+        "clipped_rounds": int(clipped),
+        "time_s": np.arange(1, periods + 1) * net.period_s,
+        "history": {k: np.asarray(hist[k])[:periods] for k in _CURVE_KEYS},
+        "services": fl_service.episode_services(
+            np.asarray(arrivals), np.asarray(counts),
+            np.asarray(rounds_done), duration, cfg.rounds_required),
+        "params": params,
+    }
+
+
+def run_cotrain_scan(cfg: simulator.SimConfig, train: TrainSpec | None = None,
+                     net: network.NetworkConfig | None = None) -> dict:
+    """Co-train one episode (one compiled ``lax.scan``).
+
+    Returns the ``run_scan`` summary keys (durations bitwise identical to
+    ``run_scan(cfg)``) plus the learning record: per-period ``history``
+    curves (eval ``loss``/``acc``, executed/simulated rounds, per-service
+    bandwidth), the ``time_s`` wall-clock axis, per-service
+    ``trained_rounds`` / ``clipped_rounds`` totals, the final stacked model
+    ``params``, and ``services`` -- the episode's ``FLService`` bookkeeping.
+    """
+    train = train or TrainSpec()
+    net = net or simulator._default_net(cfg)
+    arrivals, counts = simulator._static_draws(cfg, net)
+    rounds_done, duration, trained, clipped, params, hist = _cotrain_episode(
+        jnp.asarray(arrivals, jnp.int32), jnp.asarray(counts, jnp.int32),
+        jax.random.key(cfg.seed + 7), **_statics(cfg, train, net),
+    )
+    return _summarize_episode(cfg, net, arrivals, counts, rounds_done,
+                              duration, trained, clipped, params, hist)
+
+
+def _summarize_batch(cfg: simulator.SimConfig, net: network.NetworkConfig,
+                     seeds, arrivals, counts, rounds_done, duration, trained,
+                     clipped, params, hist) -> dict:
+    duration = np.asarray(duration)
+    done = np.asarray(hist["all_done"])                      # (S, T)
+    periods = np.where(done.any(axis=1), np.argmax(done, axis=1) + 1,
+                       cfg.max_periods)
+    rounds_done = np.asarray(rounds_done)
+    return {
+        "seeds": list(seeds),
+        "avg_duration": duration.mean(axis=1),
+        "std_duration": duration.std(axis=1),
+        "durations": duration,
+        "periods": periods,
+        "finished": np.all(rounds_done >= cfg.rounds_required, axis=1),
+        "trained_rounds": np.asarray(trained),
+        "clipped_rounds": np.asarray(clipped),
+        "time_s": np.arange(1, cfg.max_periods + 1) * net.period_s,
+        "history": {k: np.asarray(hist[k]) for k in _CURVE_KEYS},
+        "services": [
+            fl_service.episode_services(
+                np.asarray(arrivals)[i], np.asarray(counts)[i],
+                rounds_done[i], duration[i], cfg.rounds_required)
+            for i in range(len(seeds))
+        ],
+        "params": params,
+    }
+
+
+def run_cotrain_batch(cfg: simulator.SimConfig,
+                      train: TrainSpec | None = None, seeds=(0,),
+                      net: network.NetworkConfig | None = None) -> dict:
+    """Co-trained scenario sweep: the compiled episode vmapped over seeds.
+
+    Same batching contract as ``simulator.run_batch``: every episode is
+    bitwise identical to its own ``run_cotrain_scan`` regardless of which
+    other seeds share the batch.  History curves come back stacked
+    (S, max_periods, N) with the per-seed episode length in ``periods``.
+    """
+    train = train or TrainSpec()
+    net = net or simulator._default_net(cfg)
+    seeds = list(seeds)
+    if not seeds:
+        raise ValueError("run_cotrain_batch needs at least one seed")
+    keys = simulator._episode_keys(seeds)
+    arrivals, counts = simulator._draws(
+        keys, **simulator._draw_statics(cfg, net))
+    out = _cotrain_episode_batch(arrivals, counts, keys,
+                                 **_statics(cfg, train, net))
+    return _summarize_batch(cfg, net, seeds, arrivals, counts, *out)
+
+
+def run_cotrain_fleet(cfg: simulator.SimConfig,
+                      train: TrainSpec | None = None, seeds=(0,),
+                      net: network.NetworkConfig | None = None, *,
+                      mesh=None, chunk_size: int | None = None) -> dict:
+    """Device-sharded, memory-bounded co-training sweep (Monte-Carlo
+    accuracy bands): ``simulator.run_fleet`` geometry -- one-axis mesh over
+    the seed axis, fixed-size chunks per device -- around the co-trained
+    episode.  Per-seed outputs are bitwise identical to
+    ``run_cotrain_batch`` under every mesh/chunk/remainder combination."""
+    train = train or TrainSpec()
+    net = net or simulator._default_net(cfg)
+    seeds = [int(s) for s in seeds]
+    mesh, axis, n_dev, chunk, n_chunks, padded = simulator.fleet_geometry(
+        seeds, mesh, chunk_size)
+    keys = simulator._episode_keys(padded)
+    arrivals, counts = simulator._draws(
+        keys, **simulator._draw_statics(cfg, net))
+    # Host copies before the call: the compiled sweep donates these buffers.
+    arrivals_host = np.asarray(arrivals)[:len(seeds)]
+    counts_host = np.asarray(counts)[:len(seeds)]
+    statics = _statics(cfg, train, net)
+    fn = _cotrain_fleet_fn(mesh, axis, n_chunks, chunk,
+                           tuple(statics.items()))
+    out = jax.tree_util.tree_map(
+        lambda x: x[:len(seeds)],
+        fn(arrivals, counts, jax.random.key_data(keys)))
+    summary = _summarize_batch(cfg, net, seeds, arrivals_host, counts_host,
+                               *out)
+    summary["fleet"] = {"n_devices": n_dev, "mesh_axis": axis, "chunk": chunk,
+                        "n_chunks": n_chunks, "padded_to": len(padded)}
+    return summary

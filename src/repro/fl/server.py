@@ -27,12 +27,23 @@ from repro.fl import compression as fl_comp
 
 def fedavg_round(deltas, weights):
     """Weighted average of per-client deltas.  deltas: pytree with leading
-    client axis (C, ...); weights: (C,) (zero = dropped straggler)."""
-    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+    client axis (C, ...); weights: (C,) (zero = dropped straggler).
+
+    Dropped clients are masked out of the numerator (``where`` on w > 0, not
+    a bare multiply), so a straggler's delta never contributes -- even a
+    non-finite one from a diverged run.  The all-straggler round returns an
+    exactly-zero delta (params unchanged) instead of leaning on the 1e-12
+    denominator clamp; when any weight is positive the arithmetic is
+    unchanged from the plain weighted mean.
+    """
+    wsum = jnp.sum(weights)
+    denom = jnp.maximum(wsum, 1e-12)
 
     def agg(d):
         w = weights.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
-        return jnp.sum(d * w, axis=0) / wsum.astype(d.dtype)
+        num = jnp.sum(jnp.where(w > 0, d * w, jnp.zeros_like(d)), axis=0)
+        return jnp.where(wsum > 0, num / denom.astype(d.dtype),
+                         jnp.zeros_like(num))
 
     return jax.tree.map(agg, deltas)
 
@@ -70,8 +81,11 @@ def make_fl_round_step(
         new_params = jax.tree.map(
             lambda p, d: (p + server_lr * d.astype(p.dtype)), params, agg
         )
-        wsum = jnp.maximum(jnp.sum(client_weights), 1e-12)
-        mean_loss = jnp.sum(losses * client_weights) / wsum
+        wsum = jnp.sum(client_weights)
+        num = jnp.sum(jnp.where(client_weights > 0,
+                                losses * client_weights, 0.0))
+        # all-straggler round: no participants -> report loss 0, not 0/clamp
+        mean_loss = jnp.where(wsum > 0, num / jnp.maximum(wsum, 1e-12), 0.0)
         return new_params, {"loss": mean_loss,
                             "participating": jnp.sum(client_weights > 0)}
 

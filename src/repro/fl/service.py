@@ -20,7 +20,16 @@ MBIT = 1e6
 
 @dataclasses.dataclass
 class FLService:
-    """One live FL service in the network simulator."""
+    """One live FL service in the network simulator.
+
+    The bookkeeping fields (``rounds_done``, ``periods_active``,
+    ``arrived_period``) are driven by the co-simulation: ``episode_services``
+    materializes one record per fixed-capacity slot from an episode's
+    outputs, so ``finished`` reflects the simulated termination criterion --
+    a finished service's slot is an all-masked row from the next period on
+    and its bandwidth share is re-cleared across the survivors (asserted in
+    tests/test_cotrain.py).
+    """
 
     service_id: int
     n_clients: int
@@ -32,6 +41,29 @@ class FLService:
     @property
     def finished(self) -> bool:
         return self.rounds_done >= self.rounds_required
+
+
+def episode_services(arrivals, counts, rounds_done, durations,
+                     rounds_required: int) -> list[FLService]:
+    """Materialize an episode's per-slot bookkeeping as ``FLService`` records.
+
+    ``arrivals``/``counts`` are the episode-static draws ((N,) arrival period
+    and enrolled-client count per slot); ``rounds_done``/``durations`` are
+    the simulator's final counters.  Used by ``fl.cotrain`` (and valid on any
+    duration-engine summary) so the dataclass fields track the simulation
+    instead of staying at their defaults.
+    """
+    return [
+        FLService(
+            service_id=i,
+            n_clients=int(counts[i]),
+            rounds_required=int(rounds_required),
+            rounds_done=int(rounds_done[i]),
+            periods_active=int(durations[i]),
+            arrived_period=int(arrivals[i]),
+        )
+        for i in range(len(arrivals))
+    ]
 
 
 def model_bits(cfg: ModelConfig, weight_bits: int = 32, active_only: bool = False) -> float:

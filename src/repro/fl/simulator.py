@@ -44,6 +44,13 @@ tests/test_fl_runtime.py).  It consumes the *same* per-period step math as
 the scan engine, so the two produce identical durations on the same seed
 (asserted in tests/test_policy_simulator.py).
 
+``fl.cotrain`` builds the training-in-the-loop engines
+(``run_cotrain_scan`` / ``_batch`` / ``_fleet``) on the same period step:
+``_period_step`` returns the period's allocation record as ``extras``
+(dead-code-eliminated by every duration-only engine), and the co-trained
+episode consumes it to pace real FedAvg rounds -- with durations bitwise
+identical to the engines here (tests/test_cotrain.py).
+
 Policies: coop (DISBA), selfish (multi-bid auction), ec / es / pp benchmarks
 -- all resolved through the string-keyed ``core.policy`` registry, including
 the selectable intra-service backend (reference bisection or the Pallas
@@ -235,6 +242,14 @@ def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
     masking, and the scenario processes *and* the policy solver (``pol_state``,
     e.g. the warm-start dual price) carry fixed-shape state, so the scan
     engine traces this exactly once per (episode shape, scenario) combo.
+
+    Besides the carry and scalar ``stats`` it returns ``extras`` -- the
+    period's full allocation record (the churn-masked ServiceSet, per-service
+    bandwidth/frequency, activity mask, and the round counts *before* the
+    rounds_required clamp).  ``extras`` is assembled purely from values the
+    step already computed, so consuming it (the ``fl.cotrain`` co-simulation)
+    or discarding it (every duration-only engine; dead-code-eliminated under
+    jit) cannot move a single RNG draw or allocation result.
     """
     _TRACE_COUNTS["allocation_step"] += 1
     key_p = jax.random.fold_in(key, period)
@@ -269,7 +284,9 @@ def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
         "n_clients": jnp.sum(svc.mask.astype(jnp.int32)),
         "all_done": jnp.all(rounds_done >= rounds_required),
     }
-    return rounds_done, duration, chan_state, churn_state, pol_state, stats
+    extras = {"svc": svc, "b": b, "f": f, "active": active, "rounds": rounds}
+    return (rounds_done, duration, chan_state, churn_state, pol_state, stats,
+            extras)
 
 
 _EPISODE_STATICS = ("policy", "net", "n_total", "k_max", "rounds_required",
@@ -292,7 +309,7 @@ def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
     def step(carry, period):
         rounds_done, duration, chan_state, churn_state, pol_state, agg = carry
         (rounds_done, duration, chan_state, churn_state, pol_state,
-         stats) = _period_step(
+         stats, _) = _period_step(
             rounds_done, duration, chan_state, churn_state, pol_state, period,
             arrivals, counts, key,
             policy_fn=pol.step, chan_step=chan_proc.step,
@@ -469,25 +486,21 @@ def _fleet_shape(n_seeds: int, n_dev: int, chunk_size: int | None) -> tuple[int,
     return chunk, n_chunks, n_dev * n_chunks * chunk
 
 
-@functools.lru_cache(maxsize=None)
-def _fleet_fn(mesh, axis: str, n_chunks: int, chunk: int, statics_items):
-    """Compiled fleet sweep: shard_map over the seed axis of an outer
-    ``lax.map`` over chunks of the vmapped episode.
+def sharded_chunked_fn(mesh, axis: str, n_chunks: int, chunk: int, episode):
+    """Build the compiled fleet sweep for an arbitrary per-episode function:
+    shard_map over the seed axis of an outer ``lax.map`` over chunks of the
+    vmapped episode.  ``episode(arrivals, counts, key_data) -> pytree`` takes
+    one seed's inputs (keys as raw uint32 key data -- typed PRNG key arrays
+    predate stable shard_map support on the oldest JAX this repo carries).
 
-    The lru_cache plays the role of jit's cache for the mesh/chunk-grid
-    statics; the episode statics are closed over, so the period step still
-    traces exactly once per (policy, scenario, warm) combination no matter
-    how many fleet calls run.  Input buffers (arrivals, counts, key data) are
-    donated -- together with XLA's in-place reuse of the scan carry this
-    keeps peak memory at O(chunk) episode state plus the requested outputs.
+    Shared by the duration engine's ``run_fleet`` and the co-training
+    engine's ``fl.cotrain.run_cotrain_fleet``; callers lru_cache the result
+    per (mesh, chunk grid, episode statics) so the period step still traces
+    exactly once per combination no matter how many fleet calls run.  Input
+    buffers (arrivals, counts) are donated -- together with XLA's in-place
+    reuse of the scan carry this keeps peak memory at O(chunk) episode state
+    plus the requested outputs.
     """
-    statics = dict(statics_items)
-
-    def episode(arrivals, counts, key_data):
-        # Keys travel as raw uint32 key data: typed PRNG key arrays predate
-        # stable shard_map support on the oldest JAX this repo carries.
-        return _episode_impl(arrivals, counts,
-                             jax.random.wrap_key_data(key_data), **statics)
 
     def device_fn(arrivals, counts, key_data):
         def chunk_fn(args):
@@ -508,6 +521,42 @@ def _fleet_fn(mesh, axis: str, n_chunks: int, chunk: int, statics_items):
     # Keys are excluded from donation: no uint32 output ever reuses them, so
     # donating would only emit a "not usable" warning per call.
     return jax.jit(fn, donate_argnums=(0, 1))
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_fn(mesh, axis: str, n_chunks: int, chunk: int, statics_items):
+    """Compiled duration-engine fleet sweep (see ``sharded_chunked_fn``);
+    the lru_cache plays the role of jit's cache for the mesh/chunk-grid +
+    episode statics."""
+    statics = dict(statics_items)
+
+    def episode(arrivals, counts, key_data):
+        return _episode_impl(arrivals, counts,
+                             jax.random.wrap_key_data(key_data), **statics)
+
+    return sharded_chunked_fn(mesh, axis, n_chunks, chunk, episode)
+
+
+def fleet_geometry(seeds, mesh, chunk_size: int | None):
+    """Normalize a fleet request: validate the mesh (one axis), derive the
+    chunk grid, and pad the seed list with repeats of its last element so
+    every device runs the same grid.  Returns
+    ``(mesh, axis, n_dev, chunk, n_chunks, padded_seeds)``; callers slice
+    the pad rows off on device before summarizing."""
+    seeds = [int(s) for s in seeds]
+    if not seeds:
+        raise ValueError("fleet sweeps need at least one seed")
+    if mesh is None:
+        mesh = mesh_lib.make_fleet_mesh()
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"fleet sweeps shard over a one-axis mesh, got axes "
+            f"{mesh.axis_names}")
+    axis = mesh.axis_names[0]
+    n_dev = mesh.shape[axis]
+    chunk, n_chunks, padded_to = _fleet_shape(len(seeds), n_dev, chunk_size)
+    padded = seeds + [seeds[-1]] * (padded_to - len(seeds))
+    return mesh, axis, n_dev, chunk, n_chunks, padded
 
 
 def run_fleet(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None,
@@ -532,21 +581,11 @@ def run_fleet(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None,
     """
     net = net or _default_net(cfg)
     seeds = [int(s) for s in seeds]
-    if not seeds:
-        raise ValueError("run_fleet needs at least one seed")
-    if mesh is None:
-        mesh = mesh_lib.make_fleet_mesh()
-    if len(mesh.axis_names) != 1:
-        raise ValueError(
-            f"run_fleet shards over a one-axis mesh, got axes "
-            f"{mesh.axis_names}")
-    axis = mesh.axis_names[0]
-    n_dev = mesh.shape[axis]
+    mesh, axis, n_dev, chunk, n_chunks, padded = fleet_geometry(
+        seeds, mesh, chunk_size)
     n_seeds = len(seeds)
-    chunk, n_chunks, padded_to = _fleet_shape(n_seeds, n_dev, chunk_size)
-    # Pad with repeats of the last seed: identical shapes on every device;
+    # Padded with repeats of the last seed: identical shapes on every device;
     # the pad episodes' outputs are sliced off (on device) before transfer.
-    padded = seeds + [seeds[-1]] * (padded_to - n_seeds)
     keys = _episode_keys(padded)
     arrivals, counts = _draws(keys, **_draw_statics(cfg, net))
     statics = _episode_statics(cfg, net, _k_cap(cfg))
@@ -557,7 +596,7 @@ def run_fleet(cfg: SimConfig, seeds, net: network.NetworkConfig | None = None,
     )
     out = _summarize_batch(cfg, seeds, rounds_done, duration, hist)
     out["fleet"] = {"n_devices": n_dev, "mesh_axis": axis, "chunk": chunk,
-                    "n_chunks": n_chunks, "padded_to": padded_to}
+                    "n_chunks": n_chunks, "padded_to": len(padded)}
     return out
 
 
@@ -577,12 +616,20 @@ def _legacy_step_jit(policy, n_bids, alpha_fair, intra_backend, warm_start,
     )
     chan_proc = scenarios.get_channel(channel, net)
     churn_proc = scenarios.get_churn(churn, net)
-    step = jax.jit(functools.partial(
+    bound = functools.partial(
         _period_step, policy_fn=pol.step, chan_step=chan_proc.step,
         churn_step=churn_proc.step, chan_rebuilds=chan_proc.rebuilds, net=net,
         n_total=n_total, k_max=k_max, rounds_required=rounds_required,
-    ))
-    return step, chan_proc, churn_proc, pol
+    )
+
+    def _drop_extras(*args):
+        # The legacy loop only consumes the carry + stats; dropping the
+        # allocation extras inside the jit boundary lets XLA dead-code
+        # eliminate them instead of transferring a ServiceSet every period.
+        *out, _ = bound(*args)
+        return tuple(out)
+
+    return jax.jit(_drop_extras), chan_proc, churn_proc, pol
 
 
 def _scenario_state_to_json(state) -> list:

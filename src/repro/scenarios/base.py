@@ -37,10 +37,16 @@ KINDS = ("channel", "arrival", "churn")
 
 # Salt offsets folded into the per-period key so scenario draws never collide
 # with the 8-way split ``network.sample_services`` consumes (periods are far
-# below 2**30, so these also never collide with a period number).
+# below 2**30, so these also never collide with a period number).  This block
+# is the single registry of episode-key salts: the simulator's static-draw
+# stream sits at +3 (``fl.simulator._DRAW_SALT``) and the co-simulation's
+# model-init stream at +4 (``COTRAIN_SALT``), so adding a consumer here is
+# how you prove it cannot disturb any existing stream.
 INIT_SALT = 1 << 30
 FADING_SALT = (1 << 30) + 1
 CHURN_SALT = (1 << 30) + 2
+# (1 << 30) + 3 == fl.simulator._DRAW_SALT (episode-static arrivals/counts)
+COTRAIN_SALT = (1 << 30) + 4
 
 
 class Process(NamedTuple):

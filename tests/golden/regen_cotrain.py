@@ -1,0 +1,69 @@
+"""Regenerate the golden co-training summary pinned by
+tests/test_cotrain.py::test_golden_cotrain_summary.
+
+    PYTHONPATH=src python tests/golden/regen_cotrain.py
+
+Only rerun this when a change is *supposed* to move the co-trained
+trajectories (a deliberate change to the training task, the straggler
+model, or the simulated environment) -- never to paper over an allocator or
+coupling refactor that drifted: durations are separately pinned bitwise
+against the duration engine, and training losses/accuracies are pinned here.
+The config lives in this file and is copied into the JSON so the test
+replays exactly what was pinned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core import network
+from repro.fl import cotrain, simulator
+
+# Mirrors the BASE/TRAIN/NET fixtures of tests/test_cotrain.py so the golden
+# replay shares the same compiled episodes as the rest of the suite.
+CONFIG = dict(n_services_total=3, rounds_required=30, p_arrive=2.0,
+              max_periods=50, k_max=12, mean_clients=5.0, var_clients=2.0,
+              seed=0)
+NET = dict(period_s=1.0, mean_clients=5.0, var_clients=2.0)
+TRAIN = dict(vocab=16, seq_len=6, batch_size=2, eval_batch=8, rounds_cap=2)
+SEEDS = [0, 1, 2]
+POLICIES = ["coop", "selfish", "es"]
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "cotrain_summary.json")
+
+
+def build() -> dict:
+    golden: dict = {"config": CONFIG, "net": NET, "train": TRAIN,
+                    "seeds": SEEDS, "policies": {}}
+    train = cotrain.TrainSpec(**TRAIN)
+    net = network.NetworkConfig(**NET)
+    for pol in POLICIES:
+        cfg = simulator.SimConfig(policy=pol, **CONFIG)
+        out = cotrain.run_cotrain_batch(cfg, train, SEEDS, net)
+        periods = np.asarray(out["periods"])
+        golden["policies"][pol] = {
+            "durations": np.asarray(out["durations"]).astype(int).tolist(),
+            "trained_rounds":
+                np.asarray(out["trained_rounds"]).astype(int).tolist(),
+            "periods": periods.astype(int).tolist(),
+            "final_loss": [
+                np.asarray(out["history"]["loss"][i, p - 1],
+                           dtype=float).tolist()
+                for i, p in enumerate(periods)],
+            "final_acc": [
+                np.asarray(out["history"]["acc"][i, p - 1],
+                           dtype=float).tolist()
+                for i, p in enumerate(periods)],
+        }
+    return golden
+
+
+if __name__ == "__main__":
+    with open(OUT, "w") as fp:
+        json.dump(build(), fp, indent=1, sort_keys=True)
+        fp.write("\n")
+    print(f"wrote {OUT}")

@@ -19,6 +19,7 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 @pytest.mark.parametrize("artifact,validator_module", [
     ("BENCH_allocation.json", "bench_allocation"),
     ("BENCH_fleet.json", "bench_fleet"),
+    ("BENCH_cotrain.json", "paper_figs_cotrain"),
 ])
 def test_committed_bench_artifacts_validate(artifact, validator_module):
     """The repo-root bench trajectory must stay machine-reconstructable:

@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) for the FedAvg aggregation in
+``repro.fl.server``: the weighted average is permutation-invariant in the
+client axis, dropped clients (weight 0) never contribute -- not even
+non-finite deltas from diverged runs -- and the all-straggler round is the
+exact identity on params instead of leaning on the 1e-12 denominator clamp.
+Deterministic spot-checks of the same invariants run without hypothesis in
+tests/test_fl_runtime.py / tests/test_cotrain.py (the co-simulation's
+all-straggler episode), so the properties are exercised even where
+hypothesis is absent; CI installs hypothesis and fails the build if these
+would silently skip."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.fl import server  # noqa: E402
+
+
+def _deltas(rng, n_clients: int):
+    """Random two-leaf pytree of per-client deltas (C, ...)."""
+    return {
+        "w": jnp.asarray(rng.normal(size=(n_clients, 3, 2)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(n_clients, 4)).astype(np.float32)),
+    }
+
+
+def _weights(rng, n_clients: int, p_drop: float):
+    w = rng.uniform(0.1, 2.0, size=n_clients)
+    w[rng.uniform(size=n_clients) < p_drop] = 0.0
+    return jnp.asarray(w.astype(np.float32))
+
+
+@hypothesis.settings(deadline=None, max_examples=30)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), n_clients=st.integers(1, 12),
+       p_drop=st.floats(0.0, 0.9))
+def test_fedavg_round_permutation_invariant(seed, n_clients, p_drop):
+    """Client order is an artifact of batching, never of the average."""
+    rng = np.random.default_rng(seed)
+    deltas = _deltas(rng, n_clients)
+    weights = _weights(rng, n_clients, p_drop)
+    perm = jnp.asarray(rng.permutation(n_clients))
+    base = server.fedavg_round(deltas, weights)
+    permuted = server.fedavg_round(
+        jax.tree.map(lambda d: d[perm], deltas), weights[perm])
+    for k in base:
+        np.testing.assert_allclose(base[k], permuted[k],
+                                   rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.settings(deadline=None, max_examples=30)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), n_clients=st.integers(2, 12))
+def test_dropped_clients_never_contribute(seed, n_clients):
+    """Replacing every weight-0 client's delta with garbage -- huge values,
+    inf, NaN -- must not move the aggregate AT ALL (the numerator masks on
+    w > 0 instead of trusting 0 * delta, so a diverged straggler cannot
+    poison the average)."""
+    rng = np.random.default_rng(seed)
+    deltas = _deltas(rng, n_clients)
+    weights = _weights(rng, n_clients, p_drop=0.5)
+    dropped = np.asarray(weights) == 0.0
+    poison = jax.tree.map(
+        lambda d: jnp.where(
+            jnp.asarray(dropped).reshape((-1,) + (1,) * (d.ndim - 1)),
+            jnp.float32(np.nan), d),
+        deltas)
+    base = server.fedavg_round(deltas, weights)
+    poisoned = server.fedavg_round(poison, weights)
+    for k in base:
+        np.testing.assert_array_equal(base[k], poisoned[k])
+        assert np.all(np.isfinite(np.asarray(poisoned[k])))
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), n_clients=st.integers(1, 12))
+def test_all_straggler_round_is_identity_on_params(seed, n_clients):
+    """Zero participants: the aggregated delta is exactly zero (even with
+    non-finite per-client deltas) and a full round step returns params
+    unchanged with loss reported as 0 -- not sum/1e-12."""
+    rng = np.random.default_rng(seed)
+    deltas = jax.tree.map(
+        lambda d: d.at[0].set(jnp.inf) if n_clients > 0 else d,
+        _deltas(rng, n_clients))
+    zeros = jnp.zeros((n_clients,), jnp.float32)
+    agg = server.fedavg_round(deltas, zeros)
+    for k in agg:
+        np.testing.assert_array_equal(np.asarray(agg[k]), 0.0)
+
+    # end-to-end: a real round step with every client past the deadline
+    def loss_fn(p, batch):
+        return jnp.mean((p["w"] * batch["x"] - batch["y"]) ** 2)
+
+    step = server.make_fl_round_step(loss_fn, local_steps=2, client_lr=0.3)
+    params = {"w": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))}
+    batches = {
+        "x": jnp.asarray(rng.normal(
+            size=(n_clients, 2, 3)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(
+            size=(n_clients, 2, 3)).astype(np.float32)),
+    }
+    new_params, metrics = step(params, batches, zeros)
+    np.testing.assert_array_equal(np.asarray(new_params["w"]),
+                                  np.asarray(params["w"]))
+    assert float(metrics["loss"]) == 0.0
+    assert int(metrics["participating"]) == 0
+
+
+def test_weighted_mean_matches_manual_reference():
+    """Deterministic spot-check: with positive weights the masked-numerator
+    form is the plain weighted mean, bit-for-bit in float64 reference."""
+    rng = np.random.default_rng(0)
+    deltas = _deltas(rng, 5)
+    weights = jnp.asarray([1.0, 0.0, 2.0, 0.5, 0.0], jnp.float32)
+    out = server.fedavg_round(deltas, weights)
+    w = np.asarray(weights)
+    for k, d in deltas.items():
+        d = np.asarray(d)
+        ref = np.tensordot(w, d, axes=(0, 0)) / w.sum()
+        np.testing.assert_allclose(out[k], ref, rtol=1e-6)

@@ -102,6 +102,39 @@ def corrected_terms(cell: dict, block: dict | None, trips: int) -> dict:
     return out
 
 
+def megakernel_roofline(n: int = 8192, k_pad: int = 128, trips: int = 12,
+                        inner_iters: int = 48) -> dict:
+    """Analytic FLOPs/bytes model of one whole-market ``market_clear`` launch
+    (kernels/market_clear.py) vs the unfused per-trip alternative.
+
+    Per dual trip the demand+slope tile runs an ``inner_iters``-deep bisection
+    (~6 flops per (n, k) lane per iteration: update f, form 1 - tCf, square,
+    divide, accumulate) plus the closed-form slope sums (~12 flops/lane).
+    Fused, alpha/t_comp cross HBM ONCE for the whole solve because the market
+    stays resident in VMEM across trips; unfused, every trip re-reads both
+    operands and writes per-service demand/slope, so HBM traffic scales with
+    the trip count.  The ratio is the megakernel's raison d'etre on a
+    memory-bound op (arithmetic intensity stays modest even fused)."""
+    flops_per_trip = n * k_pad * (6 * inner_iters + 12)
+    flops = trips * flops_per_trip
+    bytes_fused = (2 * n * k_pad + 3 * n) * 4        # in: alpha,t_comp; out: b,f,lam
+    bytes_unfused = trips * (2 * n * k_pad + 2 * n) * 4 + 3 * n * 4
+    return {
+        "n": n, "k_pad": k_pad, "trips": trips, "inner_iters": inner_iters,
+        "flops_per_trip": float(flops_per_trip),
+        "flops_total": float(flops),
+        "hbm_bytes_fused": float(bytes_fused),
+        "hbm_bytes_unfused": float(bytes_unfused),
+        "hbm_bytes_ratio_unfused_over_fused": bytes_unfused / bytes_fused,
+        "arithmetic_intensity_fused": flops / bytes_fused,
+        "compute_term_s": flops / PEAK_FLOPS,
+        "memory_term_s_fused": bytes_fused / HBM_BW,
+        "memory_term_s_unfused": bytes_unfused / HBM_BW,
+        "bottleneck_fused": ("compute" if flops / PEAK_FLOPS
+                             > bytes_fused / HBM_BW else "memory"),
+    }
+
+
 def run() -> list[dict]:
     rows = []
     cells = load_cells()
@@ -129,5 +162,13 @@ def run() -> list[dict]:
             f"compute={terms['compute_term_s']:.2e}s "
             f"memory={terms['memory_term_s']:.2e}s "
             f"collective={terms['collective_term_s']:.2e}s"))
+    mk = megakernel_roofline()
+    common.save_artifact("roofline_megakernel", mk)
+    rows.append(common.row(
+        f"roofline/market_megakernel/N{mk['n']}", None,
+        f"flops_per_trip={mk['flops_per_trip']:.2e} "
+        f"hbm_fused={mk['hbm_bytes_fused']:.2e}B "
+        f"unfused/fused={mk['hbm_bytes_ratio_unfused_over_fused']:.1f}x "
+        f"bottleneck={mk['bottleneck_fused']}"))
     common.save_artifact("roofline_summary", summary)
     return rows

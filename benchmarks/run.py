@@ -4,6 +4,10 @@ fleet-scale allocator study and the roofline summary.  Emits
 quantity rather than a timing).
 
   PYTHONPATH=src python -m benchmarks.run [--only tables,static,...] [--full]
+
+``--only allocation`` without ``--full`` runs the tiny (CI-smoke) sizes,
+including the schema-v2 market N-sweep at toy N -- same code path and schema
+validation as the full 64..8192-service sweep, seconds instead of minutes.
 """
 from __future__ import annotations
 

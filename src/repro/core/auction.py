@@ -54,15 +54,22 @@ def uniform_truthful_bids(
     p_reserve: float = 0.0,
     p_max_bound: jax.Array | None = None,
     iters: int = BISECT_ITERS,
+    backend: str = "reference",
 ) -> MultiBid:
     """Operator announces M prices uniformly on (p0, p_max_n) (Eq. 34); a
-    truthful provider answers with its mBDF demand at each price."""
+    truthful provider answers with its mBDF demand at each price.
+
+    ``backend`` selects the joint-bisection implementation
+    (``fairness.mbdf_grid``): ``"reference"`` (default, pinned paths stay
+    bitwise-unchanged) or ``"pallas"`` (the tiled (N, M) grid kernel for
+    thousand-service books)."""
     pmax = intra.p_max(svc) if p_max_bound is None else jnp.asarray(p_max_bound)
     m = jnp.arange(1, n_bids + 1, dtype=svc.alpha.dtype)
     prices = p_reserve + m[None, :] * (pmax[:, None] - p_reserve) / (n_bids + 1)
     # One joint (N, M) bisection (bitwise-equal to the per-column vmap it
     # replaced, single fused fori_loop instead of M solves).
-    demands = fairness.mbdf_grid(svc, prices, alpha_fair, iters)
+    demands = fairness.mbdf_grid(svc, prices, alpha_fair, iters,
+                                 backend=backend)
     return MultiBid(prices=prices, demands=demands)
 
 

@@ -270,7 +270,7 @@ WARM_INNER_ITERS = 24  # inner price->frequency trips *inside* the Newton
                        # ``inner_iters`` so the returned allocation is
                        # exact-to-dtype like every other solver here
 
-DEMAND_BACKENDS = ("reference", "pallas")
+DEMAND_BACKENDS = ("reference", "pallas", "megakernel")
 
 
 def _demand_slope_backend(svc: ServiceSet, lam, inner_iters: int, backend: str):
@@ -316,9 +316,27 @@ def solve_lambda_newton_warm(
     step, so a badly stale seed degrades to plain safeguarded Newton, never
     diverges.  ``lam_prev <= 0`` (e.g. the ``WARM_COLD`` sentinel) or a seed
     at/above the bracket top falls back to the cold midpoint seed.
+
+    ``backend`` selects how the dual trips are evaluated: ``"reference"``
+    (pure jnp), ``"pallas"`` (one fused ``dual_demand`` launch per trip), or
+    ``"megakernel"`` -- the whole solve (seed, every Newton trip, final
+    demand, projection, Eq. 7 frequencies) as ONE ``ops.market_clear``
+    launch keeping the service tensors resident in VMEM across trips.
     """
+    if backend not in DEMAND_BACKENDS:
+        raise ValueError(f"unknown demand backend {backend!r}; "
+                         f"expected one of {DEMAND_BACKENDS}")
     b_total = jnp.asarray(total_bandwidth, dtype=jnp.float32)
     lam_prev = jnp.asarray(lam_prev, dtype=jnp.float32)
+    if backend == "megakernel":
+        from repro.kernels import ops
+
+        b, f, lam = ops.market_clear(
+            svc.alpha, svc.t_comp, b_total, lam_prev, use_pallas=True,
+            iters=iters, inner_iters=inner_iters,
+            newton_inner_iters=newton_inner_iters)
+        return DisbaResult(b=b, f=f, lam=lam, iterations=jnp.int32(iters),
+                           converged=jnp.bool_(True))
     lam_hi0 = jnp.max(intra.p_max(svc))
     warm_ok = jnp.logical_and(lam_prev > 0.0, lam_prev < lam_hi0)
     lam0 = jnp.where(warm_ok, lam_prev, 0.5 * lam_hi0)
@@ -356,6 +374,9 @@ def solve_lambda_newton_warm(
 # Distributed DISBA under shard_map: services sharded across mesh axes.
 # ---------------------------------------------------------------------------
 
+SHARDED_METHODS = ("bisect", "newton")
+
+
 def disba_sharded(
     mesh: Mesh | None,
     svc: ServiceSet,
@@ -363,20 +384,37 @@ def disba_sharded(
     axis_names: tuple[str, ...] = ("data",),
     iters: int = BISECT_ITERS,
     inner_iters: int = BISECT_ITERS,
+    method: str = "bisect",
+    lam_prev: jax.Array | float = WARM_COLD,
+    newton_inner_iters: int = WARM_INNER_ITERS,
+    demand_backend: str = "reference",
 ) -> DisbaResult:
     """Market-clearing DISBA with the service axis sharded over ``axis_names``.
 
     Mirrors Algorithm 1's communication pattern exactly: per-shard local
-    bisections (the providers' Eq.-12 solves) + one scalar ``psum`` per dual
+    solves (the providers' Eq.-12 problems) + one scalar reduction per dual
     iteration (the operator's demand aggregation).  N must be divisible by the
     product of the mesh axis sizes (pad with empty services otherwise --
     all-masked rows demand exactly zero bandwidth, so padding never perturbs
     the clearing price).
 
+    ``method="bisect"`` runs the cold 48-trip dual bisection (one scalar
+    demand ``psum`` per trip).  ``method="newton"`` runs the warm-startable
+    safeguarded Newton of ``solve_lambda_newton_warm`` with ``iters`` trips
+    seeded from ``lam_prev``: each trip evaluates the local shard's fused
+    demand+slope (``demand_backend="reference"`` jnp closed form or
+    ``"pallas"`` -- one ``dual_demand`` kernel launch per shard per trip) and
+    crosses devices with a single 2-scalar ``psum`` of (demand, slope); the
+    dual update itself is replicated.  Only scalar aggregate traffic ever
+    leaves a shard, so multi-device markets scale the N axis for free.
+
     ``mesh=None`` builds a one-axis mesh over every visible device via
     ``compat.flat_mesh`` -- the same mesh-construction path as
     ``fl.simulator.run_fleet`` (requires ``len(axis_names) == 1``).
     """
+    if method not in SHARDED_METHODS:
+        raise ValueError(f"unknown method {method!r}; "
+                         f"expected one of {SHARDED_METHODS}")
     if mesh is None:
         if len(axis_names) != 1:
             raise ValueError(
@@ -384,7 +422,15 @@ def disba_sharded(
                 f"for multi-axis sharding over {axis_names}")
         mesh = flat_mesh(axis_name=axis_names[0])
 
-    def shard_fn(alpha, t_comp, mask):
+    def _local_demand_slope(local: ServiceSet, lam):
+        if demand_backend == "pallas":
+            from repro.kernels import ops
+
+            return ops.dual_demand(local.alpha, local.t_comp, lam,
+                                   use_pallas=True, iters=newton_inner_iters)
+        return demand_slope_values(local, lam, newton_inner_iters)
+
+    def shard_fn(alpha, t_comp, mask, lam_seed):
         local = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
         b_total = jnp.asarray(total_bandwidth, dtype=jnp.float32)
         lam_hi_local = jnp.max(intra.p_max(local))
@@ -392,12 +438,36 @@ def disba_sharded(
         for ax in axis_names[1:]:
             lam_hi = jax.lax.pmax(lam_hi, ax)
 
-        def h(lam):
-            d_local = jnp.sum(intra.demand(local, lam, inner_iters))
-            d = jax.lax.psum(d_local, axis_names)
-            return d - b_total
+        if method == "bisect":
+            def h(lam):
+                d_local = jnp.sum(intra.demand(local, lam, inner_iters))
+                d = jax.lax.psum(d_local, axis_names)
+                return d - b_total
 
-        lam = intra._bisect(h, jnp.zeros_like(lam_hi), lam_hi, iters)
+            lam = intra._bisect(h, jnp.zeros_like(lam_hi), lam_hi, iters)
+        else:
+            warm_ok = jnp.logical_and(lam_seed > 0.0, lam_seed < lam_hi)
+            lam0 = jnp.where(warm_ok, lam_seed, 0.5 * lam_hi)
+
+            def body(_, state):
+                lam, lo, hi = state
+                b_l, s_l = _local_demand_slope(local, lam)
+                # ONE collective per trip: the (demand, slope) scalar pair.
+                d, slope = jax.lax.psum(
+                    jnp.stack([jnp.sum(b_l), jnp.sum(s_l)]), axis_names)
+                resid = d - b_total
+                lo = jnp.where(resid > 0, lam, lo)
+                hi = jnp.where(resid > 0, hi, lam)
+                step = resid / jnp.where(jnp.abs(slope) > _TINY, slope,
+                                         -_TINY)
+                lam_newton = lam - step
+                in_bracket = jnp.logical_and(lam_newton >= lo,
+                                             lam_newton <= hi)
+                lam_next = jnp.where(in_bracket, lam_newton, 0.5 * (lo + hi))
+                return lam_next, lo, hi
+
+            lam, _, _ = jax.lax.fori_loop(
+                0, iters, body, (lam0, jnp.zeros_like(lam_hi), lam_hi))
         b = intra.demand(local, lam, inner_iters)
         total = jax.lax.psum(jnp.sum(b), axis_names)
         b = b * (b_total / jnp.maximum(total, _TINY))
@@ -407,10 +477,11 @@ def disba_sharded(
     fn = shard_map_unchecked(
         shard_fn,
         mesh=mesh,
-        in_specs=(P(axis_names), P(axis_names), P(axis_names)),
+        in_specs=(P(axis_names), P(axis_names), P(axis_names), P()),
         out_specs=(P(axis_names), P(axis_names), P()),
     )
-    b, f, lam = jax.jit(fn)(svc.alpha, svc.t_comp, svc.mask)
+    lam_seed = jnp.asarray(lam_prev, dtype=jnp.float32)
+    b, f, lam = jax.jit(fn)(svc.alpha, svc.t_comp, svc.mask, lam_seed)
     return DisbaResult(
         b=b, f=f, lam=lam, iterations=jnp.int32(iters), converged=jnp.bool_(True)
     )

@@ -67,11 +67,15 @@ def mbdf(
     return intra.bandwidth_from_freq(svc, f_star)
 
 
+MBDF_BACKENDS = ("reference", "pallas")
+
+
 def mbdf_grid(
     svc: ServiceSet,
     prices: jax.Array,
     alpha_fair: float,
     iters: int = BISECT_ITERS,
+    backend: str = "reference",
 ) -> jax.Array:
     """Modified bandwidth demand at a whole (N, M) price grid in ONE joint
     bisection: the grid is flattened to an (N*M)-row replicated ServiceSet
@@ -79,8 +83,22 @@ def mbdf_grid(
     over the joint bracket instead of a vmap of M per-column solves, with
     the mMVF arithmetic keeping exactly one home.  Per element the ops are
     identical to the vmapped path, so the result matches it bitwise.
+
+    ``backend="pallas"`` dispatches to the ``kernels/market_clear``
+    (N, M)-grid kernel on the market tiling conventions instead: each
+    (TILE_N, K) service tile streams from HBM once for all M price columns
+    (no N*M row replication is ever materialized).  Exact-to-dtype against
+    the reference (tests/test_market_clear.py).
     """
     prices = jnp.asarray(prices, dtype=svc.alpha.dtype)          # (N, M)
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        return ops.mbdf_demand(svc.alpha, svc.t_comp, prices, alpha_fair,
+                               use_pallas=True, iters=iters)
+    if backend != "reference":
+        raise ValueError(f"unknown mbdf backend {backend!r}; "
+                         f"expected one of {MBDF_BACKENDS}")
     n, m = prices.shape
     rep = ServiceSet(
         alpha=jnp.repeat(svc.alpha, m, axis=0),

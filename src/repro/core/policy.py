@@ -22,13 +22,19 @@ Policies are registered under string keys (``register`` /
 The intra-service sub-problem (Eq. 7: optimal round time + per-client
 water-filling) is selectable via ``intra_backend``:
 
-  * ``"reference"`` -- the pure-jnp fixed-trip bisection in ``core/intra``;
-  * ``"pallas"``    -- the Pallas TPU kernel ``kernels/bisect_alloc`` (runs
-                       in interpret mode off-TPU), the deployment path for
-                       fleet-scale solves (EXPERIMENTS.md §Perf).
+  * ``"reference"``  -- the pure-jnp fixed-trip bisection in ``core/intra``;
+  * ``"pallas"``     -- the Pallas TPU kernel ``kernels/bisect_alloc`` (runs
+                        in interpret mode off-TPU), the deployment path for
+                        fleet-scale solves (EXPERIMENTS.md §Perf);
+  * ``"megakernel"`` -- same intra-service kernel path, but ``coop``'s
+                        *inter*-service dual solve additionally runs as ONE
+                        fused ``kernels/market_clear`` launch (the whole
+                        safeguarded-Newton iteration in VMEM) instead of one
+                        ``dual_demand`` launch per trip -- the 1024-8192
+                        service regime (EXPERIMENTS.md §Market scaling).
 
-Both backends solve the same equation with the same trip count; parity is
-asserted in tests/test_policy_simulator.py.
+All backends solve the same equations with the same trip counts; parity is
+asserted in tests/test_policy_simulator.py and tests/test_market_clear.py.
 """
 from __future__ import annotations
 
@@ -41,7 +47,7 @@ import jax.numpy as jnp
 from repro.core import auction, baselines, disba, intra
 from repro.core.types import BISECT_ITERS, ServiceSet
 
-INTRA_BACKENDS = ("reference", "pallas")
+INTRA_BACKENDS = ("reference", "pallas", "megakernel")
 
 FreqFn = Callable[[ServiceSet, jax.Array], jax.Array]
 
@@ -97,8 +103,19 @@ def _pallas_solve(svc: ServiceSet, b: jax.Array, iters: int):
                               iters=iters)
 
 
+def _intra_impl(intra_backend: str) -> str:
+    """Collapse the backend name to the intra-service implementation.
+
+    ``"megakernel"`` changes only the *inter*-service dual solve (one fused
+    ``market_clear`` launch); its intra-service sub-problems (round time /
+    client split) ride the same ``bisect_alloc`` kernel as ``"pallas"``.
+    """
+    return "pallas" if intra_backend == "megakernel" else intra_backend
+
+
 def freq_fn(intra_backend: str = "reference", iters: int = BISECT_ITERS) -> FreqFn:
     """f*(b) with the chosen intra-service solver backend."""
+    intra_backend = _intra_impl(intra_backend)
     if intra_backend == "reference":
         return lambda svc, b: intra.freq(svc, b, iters)
     if intra_backend == "pallas":
@@ -120,6 +137,7 @@ def client_split_fn(
     intra_backend: str = "reference", iters: int = BISECT_ITERS
 ) -> Callable[[ServiceSet, jax.Array], jax.Array]:
     """Per-client water-filling split b_{n,k} with the chosen backend."""
+    intra_backend = _intra_impl(intra_backend)
     if intra_backend == "reference":
         return lambda svc, b: intra.client_allocation(svc, b, iters)
     if intra_backend == "pallas":
@@ -135,6 +153,7 @@ def round_time_fn(
     +inf for b <= 0 rows).  The co-simulation derives per-round straggler
     deadlines from this -- same solver family as the allocation itself, so
     the deadline is consistent with the allocated latencies."""
+    intra_backend = _intra_impl(intra_backend)
     if intra_backend == "reference":
         return lambda svc, b: intra.solve_round_time(svc, b, iters)
     if intra_backend == "pallas":
@@ -313,6 +332,14 @@ def _coop(*, intra_backend: str = "reference", iters: int = BISECT_ITERS, **_):
     _freq = freq_fn(intra_backend, iters)
 
     def fn(svc: ServiceSet, b_total):
+        if intra_backend == "megakernel":
+            # Cold fused clear: one launch runs 12 safeguarded-Newton trips
+            # (matches solve_lambda_newton's cold configuration, which
+            # reaches the bisect optimum to solver tolerance).
+            res = disba.solve_lambda_newton_warm(
+                svc, b_total, disba.WARM_COLD, iters=12, inner_iters=iters,
+                newton_inner_iters=iters, backend="megakernel")
+            return res.b, res.f
         res = disba.solve_lambda_bisect(svc, b_total, inner_iters=iters)
         # the dual solve is backend-independent; only the final f*(b)
         # evaluation goes through the selected intra backend
@@ -330,9 +357,11 @@ def _coop_warm(*, intra_backend: str = "reference", iters: int = BISECT_ITERS,
     (``disba.solve_lambda_newton_warm``), cutting the ~48 cold bisection
     trips to <= ``disba.WARM_ITERS`` fused demand evaluations.  With the
     ``pallas`` backend each dual iteration is one ``dual_demand`` kernel
-    launch."""
+    launch; with ``megakernel`` the WHOLE warm clear -- every trip plus the
+    final demand/frequency evaluation -- is one ``market_clear`` launch."""
     _freq = freq_fn(intra_backend, iters)
-    backend = "pallas" if intra_backend == "pallas" else "reference"
+    backend = (intra_backend if intra_backend in ("pallas", "megakernel")
+               else "reference")
 
     def init_state(n: int):
         return jnp.float32(disba.WARM_COLD)
@@ -340,7 +369,10 @@ def _coop_warm(*, intra_backend: str = "reference", iters: int = BISECT_ITERS,
     def step(svc: ServiceSet, b_total, lam_prev):
         res = disba.solve_lambda_newton_warm(
             svc, b_total, lam_prev, inner_iters=iters, backend=backend)
-        f = res.f if intra_backend == "reference" else _freq(svc, res.b)
+        # megakernel emits f from the same launch; reference's res.f is
+        # already the reference evaluation.
+        f = (res.f if intra_backend in ("reference", "megakernel")
+             else _freq(svc, res.b))
         # Only carry the price out of periods that actually cleared a market;
         # an all-inactive period would otherwise poison the seed with 0.
         lam_next = jnp.where(jnp.any(svc.service_active()), res.lam, lam_prev)

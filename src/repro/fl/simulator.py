@@ -122,7 +122,7 @@ class SimConfig:
     alpha_fair: float = 0.5
     max_periods: int = 4000
     seed: int = 0
-    intra_backend: str = "reference"   # "reference" | "pallas"
+    intra_backend: str = "reference"   # "reference" | "pallas" | "megakernel"
     k_max: int | None = None           # client-capacity pad; None -> derived
     # Warm-start the allocation across periods: policy solver state (e.g.
     # coop's dual price) rides in the scan carry and seeds the next period's

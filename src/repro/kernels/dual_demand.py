@@ -40,11 +40,16 @@ TINY = 1e-30
 F_CEIL = 1.0 - 1e-6  # stay strictly inside the 1 - tC*f > 0 region (Eq. 14)
 
 
-def _dual_demand_kernel(alpha_ref, tcomp_ref, lam_ref, b_ref, slope_ref, *,
-                        iters: int):
-    alpha = alpha_ref[...]                       # (TN, K)
-    tcomp = tcomp_ref[...]                       # (TN, K)
-    lam = lam_ref[...]                           # (TN, 1)
+def demand_slope_tile(alpha, tcomp, lam, iters: int):
+    """Per-row (demand, slope) for one (TN, K) tile at price(s) ``lam``.
+
+    The in-VMEM home of the fused Eq. 14 price->frequency bisection plus the
+    Lemma 1 / Eqns. 9-10 closed-form slope.  ``lam`` may be a (TN, 1) column
+    (one price per row, the ``dual_demand`` launch shape) or a scalar (the
+    ``market_clear`` megakernel broadcasts the current dual iterate over
+    every tile).  Shared by both kernels so the per-row arithmetic is
+    bitwise-identical between the per-evaluation and whole-solve launches.
+    """
     valid = alpha > 0.0
 
     asum = jnp.sum(alpha, axis=1, keepdims=True)                 # (TN, 1)
@@ -83,7 +88,13 @@ def _dual_demand_kernel(alpha_ref, tcomp_ref, lam_ref, b_ref, slope_ref, *,
     fpp = -2.0 * s3 / jnp.maximum(s2, TINY) ** 3
     psi_p = (fpp * (1.0 + f) / fp - fp) / (1.0 + f) ** 2
     slope = jnp.where(f > 0.0, (1.0 / fp) / psi_p, 0.0)
+    return b, slope
 
+
+def _dual_demand_kernel(alpha_ref, tcomp_ref, lam_ref, b_ref, slope_ref, *,
+                        iters: int):
+    b, slope = demand_slope_tile(alpha_ref[...], tcomp_ref[...], lam_ref[...],
+                                 iters)
     b_ref[...] = b
     slope_ref[...] = slope
 

@@ -1,8 +1,17 @@
 """Jit'd public wrappers for the Pallas kernels with automatic backend
 dispatch: compiled Pallas on TPU, interpret mode when explicitly requested
 (tests), pure-jnp reference otherwise (CPU dry-run lowering uses the refs so
-the HLO stays portable)."""
+the HLO stays portable).
+
+Backend selection is centralized in ``_resolve_backend``: every op shares
+one gate instead of repeating the ``interpret or not _on_tpu()`` dance.
+Setting ``REPRO_FORCE_PALLAS=1`` in the environment forces the Pallas path
+everywhere (interpret mode off-TPU), so CPU CI can exercise every kernel's
+interpret lowering deterministically without touching call sites.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -11,50 +20,102 @@ from repro.kernels.bisect_alloc import bisect_alloc
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.dual_demand import dual_demand as dual_demand_pallas
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.market_clear import market_clear as market_clear_pallas
+from repro.kernels.market_clear import mbdf_demand as mbdf_demand_pallas
 from repro.kernels.mlstm_chunk import mlstm_chunk
+
+FORCE_PALLAS_ENV = "REPRO_FORCE_PALLAS"
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _force_pallas() -> bool:
+    return os.environ.get(FORCE_PALLAS_ENV, "").strip() not in ("", "0")
+
+
+def _resolve_backend(use_pallas: bool | None, interpret: bool) -> tuple[bool, bool]:
+    """The single home of the dispatch rule -> (use_kernel, interpret).
+
+    * ``use_pallas=None`` (auto): kernel on TPU, reference elsewhere --
+      unless ``REPRO_FORCE_PALLAS`` is set, which forces the kernel path.
+    * ``use_pallas=True/False``: explicit caller override.
+    * Off-TPU the kernel always runs in interpret mode (there is no Mosaic
+      lowering to run), regardless of the ``interpret`` argument.
+    """
+    if use_pallas is None:
+        use = _on_tpu() or _force_pallas()
+    else:
+        use = use_pallas
+    return use, interpret or not _on_tpu()
+
+
 def attention(q, k, v, *, causal=True, window=0, use_pallas=None, interpret=False):
-    use = _on_tpu() if use_pallas is None else use_pallas
+    use, interpret = _resolve_backend(use_pallas, interpret)
     if use:
         return flash_attention(q, k, v, causal=causal, window=window,
-                               interpret=interpret or not _on_tpu())
+                               interpret=interpret)
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
 
 
 def attention_decode(q, k, v, valid_len, *, use_pallas=None, interpret=False):
-    use = _on_tpu() if use_pallas is None else use_pallas
+    use, interpret = _resolve_backend(use_pallas, interpret)
     if use:
-        return decode_attention(q, k, v, valid_len,
-                                interpret=interpret or not _on_tpu())
+        return decode_attention(q, k, v, valid_len, interpret=interpret)
     return ref.decode_attention_ref(q, k, v, valid_len)
 
 
 def intra_allocate(alpha, t_comp, b, *, use_pallas=None, interpret=False, iters=48):
-    use = _on_tpu() if use_pallas is None else use_pallas
+    use, interpret = _resolve_backend(use_pallas, interpret)
     if use:
-        return bisect_alloc(alpha, t_comp, b, iters=iters,
-                            interpret=interpret or not _on_tpu())
+        return bisect_alloc(alpha, t_comp, b, iters=iters, interpret=interpret)
     return ref.bisect_alloc_ref(alpha, t_comp, b, iters=iters)
 
 
 def dual_demand(alpha, t_comp, lam, *, use_pallas=None, interpret=False, iters=48):
     """Per-service demand b_n(lam) and closed-form slope db_n/dlam in one
     fused evaluation -- the inner op of a warm-started DISBA dual iteration."""
-    use = _on_tpu() if use_pallas is None else use_pallas
+    use, interpret = _resolve_backend(use_pallas, interpret)
     if use:
         return dual_demand_pallas(alpha, t_comp, lam, iters=iters,
-                                  interpret=interpret or not _on_tpu())
+                                  interpret=interpret)
     return ref.dual_demand_ref(alpha, t_comp, lam, iters=iters)
 
 
+def market_clear(alpha, t_comp, b_total, lam_prev, *, use_pallas=None,
+                 interpret=False, iters=6, inner_iters=48,
+                 newton_inner_iters=24):
+    """The whole safeguarded-Newton market clear in ONE launch -> (b, f, lam).
+
+    The kernel keeps the (N, K) service tensors resident in VMEM across the
+    entire fixed-trip dual iteration (see kernels/market_clear.py); the
+    fallback delegates to the reference ``disba.solve_lambda_newton_warm``
+    itself, so ``use_pallas=False`` is bitwise the reference solver."""
+    use, interpret = _resolve_backend(use_pallas, interpret)
+    if use:
+        return market_clear_pallas(alpha, t_comp, b_total, lam_prev,
+                                   iters=iters, inner_iters=inner_iters,
+                                   newton_inner_iters=newton_inner_iters,
+                                   interpret=interpret)
+    return ref.market_clear_ref(alpha, t_comp, b_total, lam_prev, iters=iters,
+                                inner_iters=inner_iters,
+                                newton_inner_iters=newton_inner_iters)
+
+
+def mbdf_demand(alpha, t_comp, prices, alpha_fair, *, use_pallas=None,
+                interpret=False, iters=48):
+    """Auction joint (N, M) modified-BDF demand grid on the market tiling."""
+    use, interpret = _resolve_backend(use_pallas, interpret)
+    if use:
+        return mbdf_demand_pallas(alpha, t_comp, prices, alpha_fair,
+                                  iters=iters, interpret=interpret)
+    return ref.mbdf_demand_ref(alpha, t_comp, prices, alpha_fair, iters=iters)
+
+
 def mlstm(q, k, v, i_gate, f_gate, *, chunk=128, use_pallas=None, interpret=False):
-    use = _on_tpu() if use_pallas is None else use_pallas
+    use, interpret = _resolve_backend(use_pallas, interpret)
     if use:
         return mlstm_chunk(q, k, v, i_gate, f_gate, chunk=chunk,
-                           interpret=interpret or not _on_tpu())
+                           interpret=interpret)
     return ref.mlstm_chunk_ref(q, k, v, i_gate, f_gate)

@@ -70,6 +70,35 @@ def dual_demand_ref(alpha, t_comp, lam, iters: int = 48):
     return disba.demand_slope_values(svc, lam, iters)
 
 
+def market_clear_ref(alpha, t_comp, b_total, lam_prev, iters: int = 6,
+                     inner_iters: int = 48, newton_inner_iters: int = 24):
+    """Oracle for the whole-market megakernel: delegates to the reference
+    ``disba.solve_lambda_newton_warm`` itself, so the CPU fallback of
+    ``ops.market_clear`` is *bitwise* the reference solver (the kernel path
+    is exact-to-dtype against this)."""
+    from repro.core import disba
+    from repro.core.types import ServiceSet
+
+    mask = alpha > 0
+    svc = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+    res = disba.solve_lambda_newton_warm(
+        svc, b_total, lam_prev, iters=iters, inner_iters=inner_iters,
+        newton_inner_iters=newton_inner_iters, backend="reference")
+    return res.b, res.f, res.lam
+
+
+def mbdf_demand_ref(alpha, t_comp, prices, alpha_fair, iters: int = 48):
+    """Oracle for the (N, M) mbdf grid kernel: delegates to the core joint
+    bisection (``fairness.mbdf_grid``, itself bitwise-equal to the vmap of
+    per-column solves)."""
+    from repro.core import fairness
+    from repro.core.types import ServiceSet
+
+    mask = alpha > 0
+    svc = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+    return fairness.mbdf_grid(svc, prices, alpha_fair, iters)
+
+
 def mlstm_chunk_ref(q, k, v, i_gate, f_gate, chunk=None):
     """Oracle for the chunked mLSTM kernel: the fully-parallel stabilized
     form (exact for any chunking)."""

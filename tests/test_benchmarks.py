@@ -26,12 +26,23 @@ def test_committed_bench_artifacts_validate(artifact, validator_module):
     every committed artifact parses, passes its schema checker, and carries
     the commit/date/backend provenance stamp."""
     import importlib
+    import warnings
 
     mod = importlib.import_module(f"benchmarks.{validator_module}")
     with open(os.path.join(_REPO_ROOT, artifact)) as fp:
         data = json.load(fp)
     mod.validate(data)
     assert data["tiny"] is False, f"{artifact} must be a full-size run"
+    if data.get("dirty"):
+        warnings.warn(
+            f"\n{'!' * 70}\n"
+            f"{artifact} carries a DIRTY provenance stamp: the numbers were\n"
+            f"measured with uncommitted changes on top of commit\n"
+            f"{data.get('commit', '?')[:12]}, so that commit alone does NOT\n"
+            f"reproduce them.  Regenerate from a clean tree (commit the code\n"
+            f"first, run the bench, then commit the artifact).\n"
+            f"{'!' * 70}",
+            UserWarning, stacklevel=2)
 
 
 def test_shape_bytes_parser():

@@ -1,0 +1,228 @@
+"""The whole-market megakernel: one fused Pallas launch of the complete
+safeguarded-Newton dual solve (kernels/market_clear.py).
+
+* interpret-mode parity of the ``market_clear`` launch against the reference
+  ``solve_lambda_newton_warm`` finals (warm / stale / cold seeds) on masked
+  padded fixed-capacity sets -- exact-to-dtype, the PR-3 kernel convention;
+* the ``ops.market_clear(use_pallas=False)`` fallback bitwise against the
+  reference solver (it *is* the reference solver);
+* budget conservation and zero-demand inactive slots, including the
+  all-inactive degenerate market;
+* ``disba.solve_lambda_newton_warm(backend="megakernel")`` wiring;
+* ``disba_sharded(method="newton")``: warm-startable scalar-psum-only dual
+  trips match the dense solver, reference and pallas per-shard demand;
+* the warm-carry protocol: ``intra_backend="megakernel"`` threads through
+  ``StatefulPolicy`` and ``fl.simulator`` unchanged (``trace_count() == 1``);
+* the (N, M) mbdf grid kernel vs ``fairness.mbdf_grid`` and its auction
+  entry point.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import auction, disba, fairness, network, policy
+from repro.core.types import ServiceSet, mask_inactive
+from repro.fl import simulator
+from repro.kernels import ops, ref
+from repro.kernels.market_clear import market_clear, mbdf_demand
+
+B = network.B_TOTAL_MHZ
+
+
+def _masked_fixed_capacity_set(seed, n=9, k=31):
+    """Random padded ServiceSet with ragged counts and inactive slots."""
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(0.01, 0.3, size=(n, k)).astype(np.float32)
+    t_comp = rng.uniform(0.01, 0.06, size=(n, k)).astype(np.float32)
+    mask = np.zeros((n, k), dtype=bool)
+    for i in range(n):
+        mask[i, : rng.integers(2, k + 1)] = True
+    mask[rng.integers(0, n)] = False
+    alpha = np.where(mask, alpha, 0.0)
+    t_comp = np.where(mask, t_comp, 0.0)
+    return ServiceSet(alpha=jnp.asarray(alpha), t_comp=jnp.asarray(t_comp),
+                      mask=jnp.asarray(mask))
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity vs the reference solver finals.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,seed_scale", [
+    (0, 1.03),   # warm: the temporal-coherence case the megakernel targets
+    (1, 0.7),    # stale seed -> safeguarded recovery
+    (2, None),   # cold sentinel
+])
+def test_market_clear_kernel_matches_reference_finals(seed, seed_scale):
+    svc = _masked_fixed_capacity_set(seed)
+    lam_prev = (jnp.float32(disba.WARM_COLD) if seed_scale is None
+                else disba.solve_lambda_bisect(svc, B).lam
+                * jnp.float32(seed_scale))
+    expect = disba.solve_lambda_newton_warm(svc, B, lam_prev)
+    b, f, lam = market_clear(svc.alpha, svc.t_comp, jnp.float32(B), lam_prev,
+                             tile_n=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(lam), np.asarray(expect.lam),
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(expect.b),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(expect.f),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_market_clear_budget_and_inactive_rows():
+    svc = _masked_fixed_capacity_set(4)
+    b, f, _ = market_clear(svc.alpha, svc.t_comp, jnp.float32(B),
+                           jnp.float32(disba.WARM_COLD), tile_n=8,
+                           interpret=True)
+    np.testing.assert_allclose(float(jnp.sum(b)), B, rtol=1e-5)
+    inactive = ~np.asarray(svc.service_active())
+    assert inactive.any()
+    assert np.all(np.asarray(b)[inactive] == 0.0)
+    assert np.all(np.asarray(f)[inactive] == 0.0)
+
+
+def test_market_clear_all_inactive_market():
+    svc = _masked_fixed_capacity_set(5)
+    svc = mask_inactive(svc, jnp.zeros((svc.n_services,), bool))
+    b, f, lam = market_clear(svc.alpha, svc.t_comp, jnp.float32(B),
+                             jnp.float32(0.2), tile_n=8, interpret=True)
+    assert np.all(np.asarray(b) == 0.0)
+    assert np.all(np.asarray(f) == 0.0)
+    assert np.isfinite(float(lam))
+
+
+def test_ops_fallback_is_bitwise_reference():
+    """use_pallas=False must delegate to the reference solver itself."""
+    svc = _masked_fixed_capacity_set(6)
+    lam_prev = jnp.float32(0.15)
+    b, f, lam = ops.market_clear(svc.alpha, svc.t_comp, jnp.float32(B),
+                                 lam_prev, use_pallas=False)
+    expect = disba.solve_lambda_newton_warm(svc, B, lam_prev)
+    assert np.array_equal(np.asarray(b), np.asarray(expect.b))
+    assert np.array_equal(np.asarray(f), np.asarray(expect.f))
+    assert float(lam) == float(expect.lam)
+
+
+def test_disba_megakernel_backend():
+    svc = _masked_fixed_capacity_set(7)
+    lam_prev = disba.solve_lambda_bisect(svc, B).lam * jnp.float32(1.02)
+    res = disba.solve_lambda_newton_warm(svc, B, lam_prev,
+                                         backend="megakernel")
+    expect = disba.solve_lambda_newton_warm(svc, B, lam_prev)
+    np.testing.assert_allclose(np.asarray(res.b), np.asarray(expect.b),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res.f), np.asarray(expect.f),
+                               rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(float(res.lam), float(expect.lam), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Sharded Newton: scalar-only cross-device dual trips.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("demand_backend", ["reference", "pallas"])
+def test_disba_sharded_newton_matches_dense(demand_backend):
+    svc = _masked_fixed_capacity_set(8, n=12)
+    lam_prev = disba.solve_lambda_bisect(svc, B).lam * jnp.float32(1.05)
+    expect = disba.solve_lambda_newton_warm(svc, B, lam_prev)
+    res = disba.disba_sharded(None, svc, B, method="newton",
+                              lam_prev=lam_prev, iters=disba.WARM_ITERS,
+                              demand_backend=demand_backend)
+    np.testing.assert_allclose(np.asarray(res.b), np.asarray(expect.b),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(float(res.lam), float(expect.lam), rtol=1e-3)
+
+
+def test_disba_sharded_newton_cold_seed_matches_newton():
+    svc = _masked_fixed_capacity_set(9, n=8)
+    expect = disba.solve_lambda_newton(svc, B)
+    res = disba.disba_sharded(None, svc, B, method="newton", iters=12,
+                              newton_inner_iters=disba.BISECT_ITERS)
+    np.testing.assert_allclose(np.asarray(res.b), np.asarray(expect.b),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_disba_sharded_unknown_method_raises():
+    svc = _masked_fixed_capacity_set(10, n=4)
+    with pytest.raises(ValueError, match="method"):
+        disba.disba_sharded(None, svc, B, method="simplex")
+
+
+def test_disba_sharded_bisect_path_unchanged():
+    """The default method stays the cold bisection -- existing callers see
+    identical results."""
+    svc = _masked_fixed_capacity_set(11, n=8)
+    res = disba.disba_sharded(None, svc, B)
+    expect = disba.solve_lambda_bisect(svc, B)
+    np.testing.assert_allclose(np.asarray(res.b), np.asarray(expect.b),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Warm-carry protocol: StatefulPolicy / simulator threading.
+# ---------------------------------------------------------------------------
+
+def test_stateful_policy_megakernel_step_matches_reference():
+    svc = _masked_fixed_capacity_set(12)
+    pol = policy.get_stateful_policy("coop", warm_start=True,
+                                     intra_backend="megakernel")
+    pol_ref = policy.get_stateful_policy("coop", warm_start=True)
+    b, f, lam = pol.step(svc, B, pol.init_state(svc.n_services))
+    b_r, f_r, lam_r = pol_ref.step(svc, B, pol_ref.init_state(svc.n_services))
+    np.testing.assert_allclose(np.asarray(b), np.asarray(b_r),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_r),
+                               rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(float(lam), float(lam_r), rtol=1e-4)
+
+
+def test_simulator_scan_megakernel_traces_once():
+    cfg = simulator.SimConfig(policy="coop", intra_backend="megakernel",
+                              warm_start=True, n_services_total=6,
+                              max_periods=60, seed=0)
+    simulator.reset_trace_count()
+    out = simulator.run_scan(cfg)
+    assert simulator.trace_count() == 1
+    ref_out = simulator.run_scan(
+        simulator.SimConfig(policy="coop", warm_start=True,
+                            n_services_total=6, max_periods=60, seed=0))
+    np.testing.assert_allclose(
+        np.asarray(out["avg_duration"]), np.asarray(ref_out["avg_duration"]),
+        rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# The (N, M) mbdf grid kernel on the market tiling.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,alpha_fair", [(0, 0.5), (1, 0.0), (2, 1.0)])
+def test_mbdf_kernel_matches_grid_reference(seed, alpha_fair):
+    svc = _masked_fixed_capacity_set(seed)
+    bid = auction.uniform_truthful_bids(svc, 5, alpha_fair)
+    expect = fairness.mbdf_grid(svc, bid.prices, alpha_fair)
+    got = mbdf_demand(svc.alpha, svc.t_comp, bid.prices, alpha_fair,
+                      interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_mbdf_grid_pallas_backend_and_auction_entry():
+    svc = _masked_fixed_capacity_set(3)
+    bid_ref = auction.uniform_truthful_bids(svc, 5, 0.5)
+    bid_k = auction.uniform_truthful_bids(svc, 5, 0.5, backend="pallas")
+    assert np.array_equal(np.asarray(bid_ref.prices),
+                          np.asarray(bid_k.prices))
+    np.testing.assert_allclose(np.asarray(bid_k.demands),
+                               np.asarray(bid_ref.demands),
+                               rtol=1e-4, atol=1e-5)
+    with pytest.raises(ValueError, match="mbdf backend"):
+        fairness.mbdf_grid(svc, bid_ref.prices, 0.5, backend="nope")
+
+
+def test_mbdf_demand_ref_oracle_delegates():
+    svc = _masked_fixed_capacity_set(4)
+    bid = auction.uniform_truthful_bids(svc, 4, 0.5)
+    got = ref.mbdf_demand_ref(svc.alpha, svc.t_comp, bid.prices, 0.5)
+    expect = fairness.mbdf_grid(svc, bid.prices, 0.5)
+    assert np.array_equal(np.asarray(got), np.asarray(expect))

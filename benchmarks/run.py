@@ -20,7 +20,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: tables,static,longterm,scale,"
-                         "allocation,fleet,cotrain,roofline")
+                         "allocation,fleet,cotrain,serve,roofline")
     ap.add_argument("--full", action="store_true",
                     help="paper-sized long-term sims (slow)")
     args = ap.parse_args()
@@ -42,8 +42,9 @@ def main() -> None:
                   flush=True)
 
     from benchmarks import (allocator_scale, bench_allocation, bench_fleet,
-                            paper_figs_cotrain, paper_figs_longterm,
-                            paper_figs_static, paper_tables, roofline)
+                            bench_serve, paper_figs_cotrain,
+                            paper_figs_longterm, paper_figs_static,
+                            paper_tables, roofline)
 
     section("tables", paper_tables.run)
     section("static", paper_figs_static.run)
@@ -52,6 +53,7 @@ def main() -> None:
     section("allocation", lambda: bench_allocation.run_rows(tiny=not args.full))
     section("fleet", lambda: bench_fleet.run_rows(tiny=not args.full))
     section("cotrain", lambda: paper_figs_cotrain.run_rows(tiny=not args.full))
+    section("serve", lambda: bench_serve.run_rows(tiny=not args.full))
     section("roofline", roofline.run)
     if failures:
         sys.exit(1)

@@ -31,12 +31,17 @@ def resumable_loop(
     init_state: Any,
     n_steps: int,
     manager: CheckpointManager,
-    policy: RestartPolicy = RestartPolicy(),
+    policy: RestartPolicy | None = None,
     fail_at: int | None = None,
 ):
     """Run ``state = step_fn(state, t)`` for t in [0, n_steps), checkpointing
     every ``policy.save_every`` steps and auto-resuming from the newest
     complete checkpoint.  ``fail_at`` injects a crash (tests)."""
+    # In-body default: `policy=RestartPolicy()` in the signature is evaluated
+    # once at def time, so every default caller would share (and could
+    # mutate) ONE instance (tests/test_fault.py audits src/repro for this).
+    if policy is None:
+        policy = RestartPolicy()
     start_step, state, _ = manager.restore_latest(init_state)
     t0 = 0 if start_step is None else start_step
     state = init_state if start_step is None else state

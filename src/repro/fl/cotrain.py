@@ -247,7 +247,7 @@ _COTRAIN_STATICS = simulator._EPISODE_STATICS + ("train",)
 def _cotrain_episode_impl(arrivals, counts, key, *, train, policy, net,
                           n_total, k_max, rounds_required, max_periods,
                           n_bids, alpha_fair, intra_backend, warm_start,
-                          collect_history, channel, churn):
+                          collect_history, collect_alloc, channel, churn):
     # -- identical construction to simulator._episode_impl: the allocation
     # side of the scan must be indistinguishable from the duration engine.
     pol = policy_mod.get_stateful_policy(

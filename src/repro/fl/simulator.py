@@ -84,7 +84,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat, scenarios
 from repro.core import network, policy as policy_mod
-from repro.core.types import ServiceSet, mask_inactive
+from repro.core.types import ServiceSet, mask_clients, mask_inactive
 from repro.launch import mesh as mesh_lib
 
 POLICIES = ("coop", "selfish", "ec", "es", "pp")
@@ -132,6 +132,12 @@ class SimConfig:
     # aggregates accumulated in the carry -- cutting HBM traffic and host
     # transfer for large run_batch sweeps.
     collect_history: bool = True
+    # When True (requires collect_history) the history additionally stacks
+    # the per-period allocation record itself -- b, f, active, rounds -- so a
+    # replay exposes the full served-allocation stream.  This is the
+    # reference side of the control plane's differential check
+    # (fl.control_plane / tests/test_control_plane.py).
+    collect_alloc: bool = False
     # Scenario processes: registry keys or scenarios.spec(name, **params).
     channel_process: str | scenarios.ScenarioSpec = "iid"
     arrival_process: str | scenarios.ScenarioSpec = "poisson"
@@ -233,9 +239,9 @@ def _static_draws(cfg: SimConfig, net: network.NetworkConfig) -> tuple[np.ndarra
 # ---------------------------------------------------------------------------
 
 def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
-                 period, arrivals, counts, key, *, policy_fn, chan_step,
-                 churn_step, chan_rebuilds: bool, net, n_total: int,
-                 k_max: int, rounds_required: int):
+                 period, arrivals, counts, key, extra_avail=None, *,
+                 policy_fn, chan_step, churn_step, chan_rebuilds: bool, net,
+                 n_total: int, k_max: int, rounds_required: int):
     """One period: evolve channels and churn, flip activity masks, allocate.
 
     All shapes are fixed at (n_total, k_max); activity and churn are pure
@@ -250,6 +256,14 @@ def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
     step already computed, so consuming it (the ``fl.cotrain`` co-simulation)
     or discarding it (every duration-only engine; dead-code-eliminated under
     jit) cannot move a single RNG draw or allocation result.
+
+    ``extra_avail`` is an optional externally-supplied (n_total, k_max) bool
+    availability mask applied on top of the churn process (the control
+    plane's heartbeat-timeout drops).  ``None`` -- what every offline engine
+    passes -- leaves the traced graph unchanged; an all-True mask is a
+    bitwise no-op (masking an already-masked set is the identity), which is
+    exactly what makes the live daemon's healthy-path stream replayable by
+    ``run_scan``.
     """
     _TRACE_COUNTS["allocation_step"] += 1
     key_p = jax.random.fold_in(key, period)
@@ -267,6 +281,8 @@ def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
         )
     chan_state, svc_full = chan_step(key_p, chan_state, svc_full)
     churn_state, svc_full = churn_step(key_p, churn_state, svc_full)
+    if extra_avail is not None:
+        svc_full = mask_clients(svc_full, extra_avail)
     active = jnp.logical_and(arrivals <= period, rounds_done < rounds_required)
     svc = mask_inactive(svc_full, active)
     b, f, pol_state = policy_fn(svc, net.total_bandwidth_mhz, pol_state)
@@ -291,14 +307,16 @@ def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
 
 _EPISODE_STATICS = ("policy", "net", "n_total", "k_max", "rounds_required",
                     "max_periods", "n_bids", "alpha_fair", "intra_backend",
-                    "warm_start", "collect_history", "channel", "churn")
+                    "warm_start", "collect_history", "collect_alloc",
+                    "channel", "churn")
 
 _AGG_KEYS = ("freq_sum", "objective", "n_active", "n_clients")
 
 
 def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
                   rounds_required, max_periods, n_bids, alpha_fair,
-                  intra_backend, warm_start, collect_history, channel, churn):
+                  intra_backend, warm_start, collect_history, collect_alloc,
+                  channel, churn):
     pol = policy_mod.get_stateful_policy(
         policy, warm_start=warm_start, n_bids=n_bids, alpha_fair=alpha_fair,
         intra_backend=intra_backend,
@@ -309,7 +327,7 @@ def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
     def step(carry, period):
         rounds_done, duration, chan_state, churn_state, pol_state, agg = carry
         (rounds_done, duration, chan_state, churn_state, pol_state,
-         stats, _) = _period_step(
+         stats, extras) = _period_step(
             rounds_done, duration, chan_state, churn_state, pol_state, period,
             arrivals, counts, key,
             policy_fn=pol.step, chan_step=chan_proc.step,
@@ -319,6 +337,9 @@ def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
         )
         carry = (rounds_done, duration, chan_state, churn_state, pol_state)
         if collect_history:
+            if collect_alloc:
+                stats = dict(stats, b=extras["b"], f=extras["f"],
+                             active=extras["active"], rounds=extras["rounds"])
             return carry + ((),), stats
         # Aggregate-only mode: fold the per-period stats into the carry over
         # the first ``periods`` periods (up to and including the one where
@@ -353,7 +374,8 @@ _episode = functools.partial(jax.jit, static_argnames=_EPISODE_STATICS)(_episode
 @functools.partial(jax.jit, static_argnames=_EPISODE_STATICS)
 def _episode_batch(arrivals, counts, keys, *, policy, net, n_total, k_max,
                    rounds_required, max_periods, n_bids, alpha_fair,
-                   intra_backend, warm_start, collect_history, channel, churn):
+                   intra_backend, warm_start, collect_history, collect_alloc,
+                   channel, churn):
     """vmap of the episode over a leading seeds axis -- one compiled call
     evaluates a whole scenario sweep."""
 
@@ -363,7 +385,7 @@ def _episode_batch(arrivals, counts, keys, *, policy, net, n_total, k_max,
             rounds_required=rounds_required, max_periods=max_periods,
             n_bids=n_bids, alpha_fair=alpha_fair, intra_backend=intra_backend,
             warm_start=warm_start, collect_history=collect_history,
-            channel=channel, churn=churn,
+            collect_alloc=collect_alloc, channel=channel, churn=churn,
         )
 
     return jax.vmap(one)(arrivals, counts, keys)
@@ -390,37 +412,51 @@ def _summarize(cfg: SimConfig, rounds_done, duration, hist) -> dict:
         "std_duration": float(np.std(duration)),
         "durations": [int(d) for d in duration],
         "periods": periods,
-        "history": {
-            "freq_sum": np.asarray(hist["freq_sum"])[:periods],
-            "objective": np.asarray(hist["objective"])[:periods],
-            "n_active": np.asarray(hist["n_active"])[:periods],
-            "n_clients": np.asarray(hist["n_clients"])[:periods],
-        },
+        # Every stacked series except the completion flag (with
+        # collect_alloc that includes the b/f/active/rounds stream itself).
+        "history": {k: np.asarray(v)[:periods] for k, v in hist.items()
+                    if k != "all_done"},
         "finished": bool(np.all(np.asarray(rounds_done) >= cfg.rounds_required)),
     }
 
 
 def _episode_statics(cfg: SimConfig, net: network.NetworkConfig,
                      k_max: int) -> dict:
+    if cfg.collect_alloc and not cfg.collect_history:
+        raise ValueError(
+            "collect_alloc stacks the per-period allocation stream into the "
+            "history, so it requires collect_history=True")
     return dict(
         policy=cfg.policy, net=net, n_total=cfg.n_services_total, k_max=k_max,
         rounds_required=cfg.rounds_required, max_periods=cfg.max_periods,
         n_bids=cfg.n_bids, alpha_fair=cfg.alpha_fair,
         intra_backend=cfg.intra_backend, warm_start=cfg.warm_start,
-        collect_history=cfg.collect_history,
+        collect_history=cfg.collect_history, collect_alloc=cfg.collect_alloc,
         channel=scenarios.as_spec(cfg.channel_process, "iid"),
         churn=scenarios.as_spec(cfg.churn_process, "none"),
     )
 
 
-def run_scan(cfg: SimConfig, net: network.NetworkConfig | None = None) -> dict:
+def run_scan(cfg: SimConfig, net: network.NetworkConfig | None = None, *,
+             arrivals=None, counts=None) -> dict:
     """Simulate one episode as a single compiled ``lax.scan``.
 
     Returns the same summary keys as ``run`` (avg_duration, durations,
     periods, finished) with the per-period history as stacked arrays.
+
+    ``arrivals``/``counts`` optionally replace the episode-static draws with
+    an explicit (n_services_total,) admission trace -- per-slot arrival
+    period and enrolled-client count.  This is how the control plane's
+    differential check replays a *live* admission stream through the offline
+    reference engine: everything else (channel/churn draws, policy state)
+    still comes from ``cfg.seed``'s episode key, so a daemon run on the same
+    seed must match bitwise (tests/test_control_plane.py).
     """
     net = net or _default_net(cfg)
-    arrivals, counts = _static_draws(cfg, net)
+    if (arrivals is None) != (counts is None):
+        raise ValueError("pass arrivals and counts together (or neither)")
+    if arrivals is None:
+        arrivals, counts = _static_draws(cfg, net)
     k_max = _k_cap(cfg)
     rounds_done, duration, hist = _episode(
         jnp.asarray(arrivals, jnp.int32), jnp.asarray(counts, jnp.int32),

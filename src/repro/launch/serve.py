@@ -1,12 +1,16 @@
 """Batched serving driver: prefill + decode loop with a KV/state cache.
 
-Serves a (reduced by default) architecture on CPU for demonstration; the
-full-config serve_step is exercised at scale by the dry-run cells
-(decode_32k / long_500k).
+Serves a (reduced by default; ``--no-reduced`` selects the full public
+config) architecture on CPU for demonstration; the full-config serve_step is
+exercised at scale by the dry-run cells (decode_32k / long_500k).  Prefill
+time is measured after blocking on the logits (compute, not async dispatch),
+and every generated token -- including the first, sampled from the prefill
+logits -- goes through the same ``--temperature`` path, so the driver emits
+exactly ``--gen`` sampled tokens.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --batch 4 \
-      --prompt-len 64 --gen 32
+      --prompt-len 64 --gen 32 [--no-reduced]
 """
 from __future__ import annotations
 
@@ -20,19 +24,80 @@ from repro import configs
 from repro.models import registry
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # --reduced / --no-reduced: the old `action="store_true", default=True`
+    # declaration could never be switched off, leaving the full-config branch
+    # dead (tests/test_serve.py pins both directions).
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serve the smoke-reduced config (default); "
+                         "--no-reduced serves the full public config")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
 
-    cfg = configs.get_smoke_config(args.arch) if args.reduced \
-        else configs.get_config(args.arch)
+
+def resolve_config(arch: str, reduced: bool):
+    """The config branch ``--reduced`` selects (both directions reachable)."""
+    return configs.get_smoke_config(arch) if reduced else configs.get_config(arch)
+
+
+def sample_token(key: jax.Array, logits: jax.Array, temperature: float) -> jax.Array:
+    """(B, 1) next token from final-position logits: categorical at
+    ``temperature`` > 0, greedy argmax at 0.  Used for EVERY generated token,
+    including the first one off the prefill logits."""
+    if temperature > 0:
+        return jax.random.categorical(key, logits[:, -1] / temperature)[:, None]
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None]
+
+
+def generate(model, params, batch: dict, *, max_len: int, gen: int,
+             temperature: float, key: jax.Array, jit_prefill: bool = True):
+    """Prefill then decode ``gen`` tokens.  Returns (tokens (B, gen), info).
+
+    ``info`` carries wall-clock timings measured on device-ready outputs:
+    ``t_prefill`` blocks on the prefill logits before reading the clock, and
+    ``decode_steps`` counts the ``gen - 1`` decode launches that follow the
+    first token (sampled from the prefill logits through the same
+    temperature path as the rest).
+    """
+    if gen < 1:
+        raise ValueError(f"gen must be >= 1, got {gen}")
+    t0 = time.perf_counter()
+    if jit_prefill:
+        logits, cache = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=max_len))(params, batch)
+    else:
+        logits, cache = model.prefill(params, batch, max_len=max_len)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(model.decode_step)
+    key, sub = jax.random.split(key)
+    tok = sample_token(sub, logits, temperature)
+    generated = [tok]
+    t0 = time.perf_counter()
+    for _ in range(gen - 1):
+        logits, cache = decode(params, cache, tok)
+        key, sub = jax.random.split(key)
+        tok = sample_token(sub, logits, temperature)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    out = jnp.concatenate(generated, axis=1)
+    info = {"t_prefill": t_prefill, "t_decode": t_decode,
+            "decode_steps": gen - 1, "cache": cache}
+    return out, info
+
+
+def main(argv: list[str] | None = None) -> None:
+    args = build_parser().parse_args(argv)
+    cfg = resolve_config(args.arch, args.reduced)
     model = registry.build_model(cfg)
     params = model.init(jax.random.key(args.seed))
     max_len = args.prompt_len + args.gen
@@ -45,35 +110,19 @@ def main() -> None:
         batch["frontend_embeds"] = jax.random.normal(
             jax.random.key(2), (args.batch, args.prompt_len, cfg.d_model)) * 0.1
 
-    t0 = time.time()
-    if cfg.family == "encdec":
-        logits, cache = model.prefill(params, batch, max_len=max_len)
-    else:
-        logits, cache = jax.jit(
-            lambda p, b: model.prefill(p, b, max_len=max_len))(params, batch)
-    t_prefill = time.time() - t0
-    print(f"[prefill] {args.batch}x{args.prompt_len} in {t_prefill:.3f}s")
-
-    decode = jax.jit(model.decode_step)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    generated = [tok]
-    t0 = time.time()
-    for step in range(args.gen - 1):
-        logits, cache = decode(params, cache, tok)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits[:, -1] / args.temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    out = jnp.concatenate(generated, axis=1)
-    print(f"[decode] {args.gen - 1} steps in {t_decode:.3f}s "
-          f"({1000 * t_decode / max(args.gen - 1, 1):.1f} ms/tok/batch)")
-    print(f"[tokens] first sequence: {out[0][:16].tolist()} ...")
-    print(f"[cache]  len={int(cache['len'])}")
+    out, info = generate(
+        model, params, batch, max_len=max_len, gen=args.gen,
+        temperature=args.temperature, key=key,
+        jit_prefill=cfg.family != "encdec",
+    )
+    print(f"[prefill] {args.batch}x{args.prompt_len} in "
+          f"{info['t_prefill']:.3f}s")
+    print(f"[decode] {info['decode_steps']} steps in {info['t_decode']:.3f}s "
+          f"({1000 * info['t_decode'] / max(info['decode_steps'], 1):.1f} "
+          f"ms/tok/batch)")
+    print(f"[tokens] {out.shape[1]} generated; first sequence: "
+          f"{out[0][:16].tolist()} ...")
+    print(f"[cache]  len={int(info['cache']['len'])}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Fault-tolerance contracts: resume-loss bounds of ``resumable_loop``,
+elastic remesh planning at awkward device counts, and the repo-wide
+mutable-default-argument audit that the ``fault.resumable_loop`` fix
+(``policy=RestartPolicy()`` evaluated once at def time) motivated."""
+import dataclasses
+import importlib
+import inspect
+import pkgutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed import elastic, fault
+
+
+def _make_step(log):
+    def step(state, t):
+        log.append(t)
+        return state * jnp.float32(1.0001) + jnp.float32(t)
+    return step
+
+
+def _clean_run(tmp_path, n_steps, save_every):
+    mgr = CheckpointManager(tmp_path / "clean")
+    log = []
+    final = fault.resumable_loop(
+        _make_step(log), jnp.float32(1.0), n_steps, mgr,
+        fault.RestartPolicy(save_every=save_every))
+    assert log == list(range(n_steps))
+    return final
+
+
+@pytest.mark.parametrize("fail_at,expected_replayed", [
+    (7, [6]),       # off-boundary: newest checkpoint is step 6, replay t=6
+    (6, []),        # on-boundary: checkpoint exactly at the crash, replay 0
+])
+def test_resumable_loop_replay_bound(tmp_path, fail_at, expected_replayed):
+    """A crashed-and-restarted loop resumes bit-identically to a clean run
+    and re-executes at most ``save_every - 1`` steps."""
+    n_steps, save_every = 10, 3
+    clean = _clean_run(tmp_path, n_steps, save_every)
+
+    mgr = CheckpointManager(tmp_path / "crash")
+    policy = fault.RestartPolicy(save_every=save_every)
+    log = []
+    with pytest.raises(RuntimeError, match="injected"):
+        fault.resumable_loop(_make_step(log), jnp.float32(1.0), n_steps, mgr,
+                             policy, fail_at=fail_at)
+    assert log == list(range(fail_at))
+    resumed_log = []
+    final = fault.resumable_loop(_make_step(resumed_log), jnp.float32(1.0),
+                                 n_steps, mgr, policy)
+    replayed = [t for t in resumed_log if t < fail_at]
+    assert replayed == expected_replayed
+    assert len(replayed) <= save_every - 1
+    assert resumed_log[-1] == n_steps - 1
+    # bit-identical, not merely close: deterministic step + exact restore
+    assert np.array_equal(np.asarray(final), np.asarray(clean))
+
+
+def test_restart_policy_default_not_shared():
+    """Regression for the def-time-evaluated ``policy=RestartPolicy()``
+    default: the signature default must be None (fresh instance per call),
+    not one shared mutable dataclass."""
+    default = inspect.signature(fault.resumable_loop).parameters["policy"]
+    assert default.default is None
+
+
+# -- elastic remesh planning -------------------------------------------------
+
+def test_plan_service_remesh_non_power_of_two_model_parallel():
+    plan = elastic.plan_service_remesh(12, 9, model_parallel=6)
+    assert plan["before"] == {"data": 2, "model": 6}
+    # 9 devices can't hold model=6; halving lands on 3 (9 = 3 x 3)
+    assert plan["after"] == {"data": 3, "model": 3}
+    assert plan["model_parallel_changed"] is True
+    for side in ("before", "after"):
+        assert plan[side]["data"] * plan[side]["model"] in (12, 9)
+
+
+def test_plan_service_remesh_shrink_below_model_parallel():
+    plan = elastic.plan_service_remesh(32, 4, model_parallel=16)
+    assert plan["before"] == {"data": 2, "model": 16}
+    assert plan["after"] == {"data": 1, "model": 4}
+    assert plan["after"]["model"] <= 4
+    assert plan["model_parallel_changed"] is True
+
+
+def test_plan_service_remesh_degenerate_single_device():
+    plan = elastic.plan_service_remesh(16, 1, model_parallel=16)
+    assert plan["after"] == {"data": 1, "model": 1}
+
+
+# -- repo-wide mutable-default audit ----------------------------------------
+
+def _is_mutable_default(value) -> bool:
+    if isinstance(value, (list, dict, set, bytearray)):
+        return True
+    # A non-frozen dataclass instance as a default is the same trap:
+    # one shared instance whose fields any caller can mutate.
+    return (dataclasses.is_dataclass(value)
+            and not type(value).__dataclass_params__.frozen)
+
+
+def _iter_repro_callables():
+    import repro
+    for info in pkgutil.walk_packages(repro.__path__, "repro."):
+        try:
+            mod = importlib.import_module(info.name)
+        except Exception:  # pragma: no cover - optional deps stay optional
+            continue
+        for _, fn in inspect.getmembers(mod, inspect.isfunction):
+            if fn.__module__ == info.name:
+                yield fn
+        for _, cls in inspect.getmembers(mod, inspect.isclass):
+            if cls.__module__ != info.name or dataclasses.is_dataclass(cls):
+                continue   # dataclass fields are audited by dataclasses itself
+            for _, fn in inspect.getmembers(cls, inspect.isfunction):
+                if fn.__qualname__.startswith(cls.__name__):
+                    yield fn
+
+
+def test_no_mutable_defaults_under_src_repro():
+    """The audit behind the resumable_loop fix: no function or method in
+    the package may default an argument to a shared mutable instance."""
+    offenders, scanned = [], 0
+    for fn in _iter_repro_callables():
+        scanned += 1
+        try:
+            sig = inspect.signature(fn)
+        except (ValueError, TypeError):
+            continue
+        for name, param in sig.parameters.items():
+            if param.default is not inspect.Parameter.empty and \
+                    _is_mutable_default(param.default):
+                offenders.append(f"{fn.__module__}.{fn.__qualname__}({name})")
+    assert scanned > 100, "audit walked suspiciously few callables"
+    assert not offenders, f"mutable defaults found: {offenders}"

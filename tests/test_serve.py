@@ -1,0 +1,109 @@
+"""Serving-driver regressions (launch.serve).
+
+Pins the two bugs the driver shipped with:
+  * ``--reduced`` was declared ``action="store_true", default=True`` -- a
+    flag that could never be turned off, leaving the full-config branch
+    dead code;
+  * the first generated token was always ``argmax`` even with
+    ``--temperature > 0`` (and ``t_prefill`` was read before blocking on
+    the async-dispatched logits), so sampled generation silently started
+    greedy and emitted ``gen`` tokens only by accident of the loop bounds.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import serve
+
+_V = 11
+
+
+class _StubModel:
+    """Deterministic toy model: prefill logits ramp up to token _V-1 (the
+    argmax), decode logits ramp down to token 0.  Cache carries a length
+    counter so decode launches are countable through jit."""
+
+    def prefill(self, params, batch, max_len):
+        b, length = batch["tokens"].shape
+        logits = jnp.broadcast_to(
+            jnp.arange(_V, dtype=jnp.float32) * 0.1, (b, length, _V))
+        return logits, {"len": jnp.int32(length)}
+
+    def decode_step(self, params, cache, tok):
+        b = tok.shape[0]
+        logits = jnp.broadcast_to(
+            -jnp.arange(_V, dtype=jnp.float32) * 0.1, (b, 1, _V))
+        return logits, {"len": cache["len"] + 1}
+
+
+# -- the --reduced flag ------------------------------------------------------
+
+def test_reduced_flag_defaults_on():
+    assert serve.build_parser().parse_args([]).reduced is True
+
+
+def test_reduced_flag_can_be_disabled():
+    """The pre-fix parser accepted only ``--reduced`` (a no-op given the
+    True default); ``--no-reduced`` must parse and flip the branch."""
+    assert serve.build_parser().parse_args(["--no-reduced"]).reduced is False
+    assert serve.build_parser().parse_args(["--reduced"]).reduced is True
+
+
+def test_resolve_config_reaches_both_branches(monkeypatch):
+    from repro import configs
+    monkeypatch.setattr(configs, "get_smoke_config", lambda arch: "smoke")
+    monkeypatch.setattr(configs, "get_config", lambda arch: "full")
+    assert serve.resolve_config("any", reduced=True) == "smoke"
+    assert serve.resolve_config("any", reduced=False) == "full"
+
+
+# -- sampling + token count --------------------------------------------------
+
+def _generate(gen, temperature, seed=0, batch_size=2, prompt_len=3):
+    model = _StubModel()
+    batch = {"tokens": jnp.zeros((batch_size, prompt_len), jnp.int32)}
+    return serve.generate(
+        model, {}, batch, max_len=prompt_len + gen, gen=gen,
+        temperature=temperature, key=jax.random.key(seed), jit_prefill=False)
+
+
+def test_first_token_uses_temperature_path():
+    """Regression: the first token must come from the same categorical
+    sampler as the rest, not argmax.  With seed 0 / temperature 3 on the
+    stub's ramp logits the sampled token (8) differs from argmax (10)."""
+    out, _ = _generate(gen=3, temperature=3.0, seed=0)
+    key = jax.random.key(0)
+    expected = serve.sample_token(
+        jax.random.split(key)[1],
+        _StubModel().prefill({}, {"tokens": jnp.zeros((2, 3), jnp.int32)},
+                             max_len=6)[0],
+        3.0)
+    assert jnp.array_equal(out[:, :1], expected)
+    assert int(expected[0, 0]) != _V - 1, (
+        "chosen seed must distinguish sampling from argmax")
+
+
+def test_first_token_greedy_at_temperature_zero():
+    out, _ = _generate(gen=2, temperature=0.0)
+    assert int(out[0, 0]) == _V - 1          # prefill argmax
+    assert int(out[0, 1]) == 0               # decode argmax
+
+
+def test_emits_exactly_gen_tokens():
+    for gen in (1, 4):
+        out, info = _generate(gen=gen, temperature=1.0)
+        assert out.shape == (2, gen)
+        assert info["decode_steps"] == gen - 1
+        # cache counter: prompt_len + one bump per decode launch
+        assert int(info["cache"]["len"]) == 3 + (gen - 1)
+
+
+def test_gen_must_be_positive():
+    with pytest.raises(ValueError, match="gen"):
+        _generate(gen=0, temperature=1.0)
+
+
+def test_prefill_timing_measured_on_ready_logits():
+    _, info = _generate(gen=1, temperature=1.0)
+    assert info["t_prefill"] > 0.0
+    assert info["decode_steps"] == 0

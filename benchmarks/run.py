@@ -20,7 +20,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: tables,static,longterm,scale,"
-                         "allocation,fleet,cotrain,serve,roofline")
+                         "allocation,fleet,cotrain,serve,fault,roofline")
     ap.add_argument("--full", action="store_true",
                     help="paper-sized long-term sims (slow)")
     args = ap.parse_args()
@@ -41,8 +41,8 @@ def main() -> None:
             print(f"{name}/FAILED,,{traceback.format_exc().splitlines()[-1]}",
                   flush=True)
 
-    from benchmarks import (allocator_scale, bench_allocation, bench_fleet,
-                            bench_serve, paper_figs_cotrain,
+    from benchmarks import (allocator_scale, bench_allocation, bench_fault,
+                            bench_fleet, bench_serve, paper_figs_cotrain,
                             paper_figs_longterm, paper_figs_static,
                             paper_tables, roofline)
 
@@ -54,6 +54,7 @@ def main() -> None:
     section("fleet", lambda: bench_fleet.run_rows(tiny=not args.full))
     section("cotrain", lambda: paper_figs_cotrain.run_rows(tiny=not args.full))
     section("serve", lambda: bench_serve.run_rows(tiny=not args.full))
+    section("fault", lambda: bench_fault.run_rows(tiny=not args.full))
     section("roofline", roofline.run)
     if failures:
         sys.exit(1)

@@ -1,0 +1,33 @@
+"""Deterministic, seeded chaos engineering for the allocation stack.
+
+Composable fault injectors over the live control plane + daemon
+(``fl.control_plane`` / ``launch.allocd``), every draw keyed on
+``(seed, period, channel)`` so any failure trajectory is exactly replayable
+from its seed (``schedule.ChaosSchedule``).  The injector catalogue
+(``injectors``): heartbeat faults (drop / delay / duplicate / flap), solver
+faults (deterministic deadline misses, NaN/Inf-poisoned channel state,
+badly-stale or non-finite warm dual seeds), checkpoint faults (torn COMMIT,
+corrupted / truncated shards behind an intact COMMIT, restart storms), and
+admission faults (bursts, duplicate admits, retire-of-unknown).
+
+``engine.run_storm`` drives a storm and returns a JSON-able report with a
+trajectory digest (same seed -> identical digest); ``invariants.verify``
+checks the safety net under every schedule: budget conservation, no
+non-finite value ever served, retired slots never allocated, and the
+recorded trace replaying bitwise through ``simulator.run_scan``.
+
+See EXPERIMENTS.md §Chaos drills for the catalogue and replay instructions.
+"""
+from repro.chaos.schedule import ChaosSchedule
+from repro.chaos.injectors import (AdmissionChaos, CheckpointChaos,
+                                   HeartbeatChaos, Injector, SolverChaos,
+                                   poison_channel_state, poison_warm_seed)
+from repro.chaos.engine import ChaosEngine, default_injectors, run_storm
+from repro.chaos import invariants
+
+__all__ = [
+    "ChaosSchedule", "Injector", "HeartbeatChaos", "SolverChaos",
+    "CheckpointChaos", "AdmissionChaos", "poison_channel_state",
+    "poison_warm_seed", "ChaosEngine", "default_injectors", "run_storm",
+    "invariants",
+]

@@ -1,0 +1,114 @@
+"""Safety invariants every chaos storm must preserve.
+
+``verify`` checks the served decision stream (fresh, stale, and degraded
+alike) and the surviving plane against the properties no injected fault is
+allowed to break:
+
+* **budget**       -- no served allocation exceeds the provider's bandwidth
+                      budget (beyond float32 tolerance);
+* **finite**       -- no non-finite bandwidth or frequency is ever served
+                      (the nonfinite catch must have degraded instead);
+* **inactive_zero**-- slots flagged inactive in a decision receive nothing;
+* **occupancy**    -- bandwidth only ever goes to slots that were occupied
+                      in the registry when the decision was served (retired
+                      slots are never allocated);
+* **replay**       -- when the plane still claims ``replayable``, its
+                      fresh-solve stream matches ``simulator.run_scan`` on
+                      the recorded trace **bitwise** (decisions aligned by
+                      period, so a post-restart partial stream still
+                      checks).
+
+Each entry of the returned dict is ``{"ok": bool, ...detail}``;
+``assert_invariants`` raises on the first violation with the full report.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Absolute/relative slack for float32 budget sums.
+_BUDGET_RTOL = 1e-5
+_BUDGET_ATOL = 1e-6
+
+
+def verify(served, plane, occupancy: list[list[int]] | None = None) -> dict:
+    """Check every invariant; never raises (use ``assert_invariants`` for
+    that).  ``occupancy`` is the engine's per-wall-period record of occupied
+    slots, indexed like ``served``."""
+    out: dict[str, dict] = {}
+    budget = plane.net.total_bandwidth_mhz
+    bound = budget * (1.0 + _BUDGET_RTOL) + _BUDGET_ATOL
+
+    bad_budget = []
+    bad_finite = []
+    bad_inactive = []
+    for i, d in enumerate(served):
+        b = np.asarray(d.b, np.float64)
+        f = np.asarray(d.f, np.float64)
+        active = np.asarray(d.active, bool)
+        if float(b.sum()) > bound:
+            bad_budget.append({"index": i, "period": int(d.period),
+                               "sum_mhz": float(b.sum())})
+        if not (np.all(np.isfinite(b)) and np.all(np.isfinite(f))):
+            bad_finite.append({"index": i, "period": int(d.period)})
+        if np.any(b[~active] != 0.0) or np.any(f[~active] != 0.0):
+            bad_inactive.append({"index": i, "period": int(d.period)})
+    out["budget"] = {"ok": not bad_budget, "budget_mhz": float(budget),
+                     "violations": bad_budget[:5]}
+    out["finite"] = {"ok": not bad_finite, "violations": bad_finite[:5]}
+    out["inactive_zero"] = {"ok": not bad_inactive,
+                            "violations": bad_inactive[:5]}
+
+    if occupancy is not None:
+        bad_occ = []
+        for i, d in enumerate(served):
+            if i >= len(occupancy):
+                break
+            allowed = set(occupancy[i])
+            getting = set(int(s) for s in np.flatnonzero(
+                np.asarray(d.b, np.float64) > 0.0))
+            stray = sorted(getting - allowed)
+            if stray:
+                bad_occ.append({"index": i, "period": int(d.period),
+                                "slots": stray})
+        out["occupancy"] = {"ok": not bad_occ, "violations": bad_occ[:5]}
+
+    out["replay"] = _check_replay(plane)
+    return out
+
+
+def _check_replay(plane) -> dict:
+    """Bitwise differential replay of the plane's fresh-solve stream.  Only
+    meaningful while the plane claims ``replayable``: every injected fault
+    falsifies that flag with a recorded reason, which is itself part of the
+    contract -- so a non-replayable plane passes this check iff it has at
+    least one recorded reason."""
+    if not plane.replayable:
+        reasons = list(plane.unreplayable_reasons)
+        return {"ok": bool(reasons), "skipped": True, "reasons": reasons}
+    if not plane.decisions:
+        return {"ok": True, "skipped": True, "reasons": ["no fresh decision"]}
+    ref = plane.replay_reference()
+    b_ref = np.asarray(ref["history"]["b"])
+    f_ref = np.asarray(ref["history"]["f"])
+    mismatches = []
+    checked = 0
+    for d in plane.decisions:
+        if d.period >= b_ref.shape[0]:
+            continue
+        checked += 1
+        if not (np.array_equal(np.asarray(d.b), b_ref[d.period])
+                and np.array_equal(np.asarray(d.f), f_ref[d.period])):
+            mismatches.append(int(d.period))
+    return {"ok": not mismatches, "skipped": False, "checked": checked,
+            "mismatch_periods": mismatches[:10]}
+
+
+def assert_invariants(served, plane,
+                      occupancy: list[list[int]] | None = None) -> dict:
+    """``verify`` + raise AssertionError naming every violated invariant."""
+    report = verify(served, plane, occupancy=occupancy)
+    bad = [name for name, res in report.items() if not res["ok"]]
+    if bad:
+        raise AssertionError(
+            f"chaos invariants violated: {bad}; report={report}")
+    return report

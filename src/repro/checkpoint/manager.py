@@ -1,20 +1,27 @@
 """Pytree checkpointing without orbax.
 
 Layout:  <dir>/step_<N>/
-            meta.json          # tree structure + shapes + dtypes + user info
+            meta.json          # tree structure + shapes + dtypes + checksums
             shard_<i>.npz      # flat leaves, chunked to ~512MB per shard
             COMMIT             # written LAST -> presence marks completeness
 
-Crash-safety: a checkpoint is valid iff COMMIT exists; ``restore_latest``
-skips incomplete step dirs (a mid-write crash leaves no COMMIT).  Writes go to
-a temp dir renamed into place, so a half-written step never shadows an older
-complete one.  ``keep`` bounds retention (oldest complete checkpoints pruned
-after a new COMMIT).  This is the restart path the FL simulator and the
-training driver use for fault tolerance.
+Crash-safety: a checkpoint is valid iff COMMIT exists AND every shard matches
+the sha256 recorded in ``meta.json`` (silent media corruption of a committed
+step is detected, not trusted).  Writes go to a temp dir that is fsynced
+(shards, meta, COMMIT, then the directory) and renamed into place, so a
+half-written step never shadows an older complete one; a re-save of an
+existing step swaps atomically instead of leaving a window with no
+checkpoint.  ``restore_latest`` walks newest -> oldest and *skips past* any
+step that fails verification (recorded in ``last_skipped``), so one corrupted
+checkpoint degrades recovery by ``save_every`` steps instead of crashing the
+restart loop.  ``keep`` bounds retention (oldest complete checkpoints pruned
+after a new COMMIT).  This is the restart path the FL simulator, the training
+driver, and the allocation control plane use for fault tolerance.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import shutil
@@ -33,6 +40,22 @@ def _flatten_with_names(tree) -> list[tuple[str, Any]]:
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves]
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 @dataclasses.dataclass
 class CheckpointManager:
     directory: str
@@ -40,6 +63,15 @@ class CheckpointManager:
 
     def __post_init__(self):
         os.makedirs(self.directory, exist_ok=True)
+        # Steps restore_latest had to skip (unverifiable committed
+        # checkpoints), refreshed on every restore_latest call.
+        self.last_skipped: list[tuple[int, str]] = []
+        # A crash mid-save leaves an orphaned temp dir; sweep them so a
+        # restart storm cannot accumulate garbage.
+        for name in os.listdir(self.directory):
+            if name.startswith(".tmp_"):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
@@ -71,10 +103,13 @@ class CheckpointManager:
                 shards[-1].append((name, arr))
                 size += arr.nbytes
             index = {}
+            checksums = {}
             for i, shard in enumerate(shards):
                 fname = f"shard_{i:04d}.npz"
-                np.savez(os.path.join(tmp_dir, fname),
-                         **{n: a for n, a in shard})
+                fpath = os.path.join(tmp_dir, fname)
+                np.savez(fpath, **{n: a for n, a in shard})
+                _fsync_path(fpath)
+                checksums[fname] = _sha256(fpath)
                 for n, _ in shard:
                     index[n] = fname
             meta = {
@@ -82,16 +117,36 @@ class CheckpointManager:
                 "treedef": str(treedef),
                 "leaf_names": [n for n, _ in named],
                 "index": index,
+                "shard_checksums": checksums,
                 "extra": extra or {},
             }
-            with open(os.path.join(tmp_dir, "meta.json"), "w") as f:
+            meta_path = os.path.join(tmp_dir, "meta.json")
+            with open(meta_path, "w") as f:
                 json.dump(meta, f)
-            # commit marker written last inside tmp, then atomic rename
-            with open(os.path.join(tmp_dir, _COMMIT), "w") as f:
+                f.flush()
+                os.fsync(f.fileno())
+            # Commit marker written last inside tmp; fsync it and the tmp
+            # directory so the marker is durable before the rename makes the
+            # step visible.
+            commit_path = os.path.join(tmp_dir, _COMMIT)
+            with open(commit_path, "w") as f:
                 f.write("ok")
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_path(tmp_dir)
             if os.path.exists(final_dir):
-                shutil.rmtree(final_dir)
-            os.rename(tmp_dir, final_dir)
+                # Idempotent re-save of an existing step (restart replaying
+                # its last period): swap atomically -- rename the old step
+                # aside, the new one in, then drop the old.  rmtree-first
+                # would leave a window with no checkpoint at this step.
+                aside = final_dir + ".old"
+                shutil.rmtree(aside, ignore_errors=True)
+                os.rename(final_dir, aside)
+                os.rename(tmp_dir, final_dir)
+                shutil.rmtree(aside, ignore_errors=True)
+            else:
+                os.rename(tmp_dir, final_dir)
+            _fsync_path(self.directory)
         except BaseException:
             shutil.rmtree(tmp_dir, ignore_errors=True)
             raise
@@ -104,12 +159,50 @@ class CheckpointManager:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # ------------------------------------------------------------------
+    def verify_step(self, step: int) -> tuple[bool, str]:
+        """Is the committed checkpoint at ``step`` actually loadable?
+
+        COMMIT present, meta.json parseable, every indexed shard present and
+        matching its recorded sha256.  Pre-checksum checkpoints (no
+        ``shard_checksums`` in meta) fall back to a load check: each shard
+        must at least decompress and contain its indexed leaves.
+        """
+        step_dir = self._step_dir(step)
+        if not os.path.exists(os.path.join(step_dir, _COMMIT)):
+            return False, "no COMMIT marker"
+        try:
+            with open(os.path.join(step_dir, "meta.json")) as f:
+                meta = json.load(f)
+        except (OSError, ValueError) as exc:
+            return False, f"unreadable meta.json ({exc})"
+        checksums = meta.get("shard_checksums")
+        for fname in sorted(set(meta.get("index", {}).values())):
+            fpath = os.path.join(step_dir, fname)
+            if not os.path.exists(fpath):
+                return False, f"missing shard {fname}"
+            if checksums is not None:
+                if _sha256(fpath) != checksums.get(fname):
+                    return False, f"checksum mismatch on {fname}"
+            else:
+                try:
+                    with np.load(fpath) as payload:
+                        names = set(payload.files)
+                    for leaf, shard in meta["index"].items():
+                        if shard == fname and leaf not in names:
+                            return False, f"shard {fname} missing leaf {leaf}"
+                except Exception as exc:
+                    return False, f"unloadable shard {fname} ({exc})"
+        return True, "ok"
+
     def restore(self, step: int, like):
         """Restore into the structure of ``like`` (a pytree of arrays or
-        ShapeDtypeStructs)."""
+        ShapeDtypeStructs).  Raises on a committed-but-corrupted step."""
         step_dir = self._step_dir(step)
         if not os.path.exists(os.path.join(step_dir, _COMMIT)):
             raise FileNotFoundError(f"no complete checkpoint at step {step}")
+        ok, reason = self.verify_step(step)
+        if not ok:
+            raise IOError(f"checkpoint at step {step} is corrupted: {reason}")
         with open(os.path.join(step_dir, "meta.json")) as f:
             meta = json.load(f)
         cache: dict[str, Any] = {}
@@ -132,11 +225,21 @@ class CheckpointManager:
         ), meta["extra"]
 
     def restore_latest(self, like):
-        """(step, tree, extra) from the newest COMPLETE checkpoint, or
-        (None, like, {}) when none exists -- the auto-resume entry point."""
-        steps = self.all_steps()
-        if not steps:
-            return None, like, {}
-        step = steps[-1]
-        tree, extra = self.restore(step, like)
-        return step, tree, extra
+        """(step, tree, extra) from the newest VERIFIABLE checkpoint, or
+        (None, like, {}) when none survives -- the auto-resume entry point.
+
+        A committed-but-corrupted newest step (torn shard, bit rot, truncated
+        payload behind an intact COMMIT) is skipped, recorded in
+        ``last_skipped`` as ``(step, reason)``, and the walk continues to the
+        next-older step: one bad checkpoint costs ``save_every`` steps of
+        recovery, never the whole job.
+        """
+        self.last_skipped = []
+        for step in reversed(self.all_steps()):
+            ok, reason = self.verify_step(step)
+            if not ok:
+                self.last_skipped.append((step, reason))
+                continue
+            tree, extra = self.restore(step, like)
+            return step, tree, extra
+        return None, like, {}

@@ -52,6 +52,25 @@ class DisbaResult(NamedTuple):
     lam: jax.Array        # () final dual price
     iterations: jax.Array  # () iterations used
     converged: jax.Array  # () bool
+    # () bool: True when the warm solver detected non-finite inputs/outputs
+    # and served the cold-bisection rescue instead (never silent -- the
+    # control plane mirrors this into its ``solver_fallbacks`` metric).
+    fallback: jax.Array | bool = False
+
+
+def sanitize_service_set(svc: ServiceSet) -> tuple[ServiceSet, jax.Array]:
+    """(cleaned set, poisoned?) -- non-finite alpha/t_comp entries are masked
+    out and replaced with benign placeholders so every downstream bisection
+    keeps a finite bracket.  ``poisoned`` is True iff any *masked-in* entry
+    was non-finite (placeholder rows of inactive slots never count)."""
+    ok = jnp.logical_and(jnp.isfinite(svc.alpha), jnp.isfinite(svc.t_comp))
+    poisoned = jnp.any(jnp.logical_and(svc.mask, ~ok))
+    clean = ServiceSet(
+        alpha=jnp.where(ok, svc.alpha, 1.0),
+        t_comp=jnp.where(ok, svc.t_comp, 1.0),
+        mask=jnp.logical_and(svc.mask, ok),
+    )
+    return clean, poisoned
 
 
 def _objective(svc: ServiceSet, b: jax.Array) -> jax.Array:
@@ -322,12 +341,20 @@ def solve_lambda_newton_warm(
     ``"megakernel"`` -- the whole solve (seed, every Newton trip, final
     demand, projection, Eq. 7 frequencies) as ONE ``ops.market_clear``
     launch keeping the service tensors resident in VMEM across trips.
+
+    Non-finite hardening: NaN/Inf anywhere in the masked-in service tensors,
+    a non-finite warm seed, or a non-finite solver output triggers a
+    cold-bisection rescue on the sanitized set (``sanitize_service_set``) --
+    flagged in ``DisbaResult.fallback``, never silent.  The healthy path is
+    bitwise unchanged: the rescue sits behind a ``lax.cond`` whose predicate
+    is False on finite inputs.
     """
     if backend not in DEMAND_BACKENDS:
         raise ValueError(f"unknown demand backend {backend!r}; "
                          f"expected one of {DEMAND_BACKENDS}")
     b_total = jnp.asarray(total_bandwidth, dtype=jnp.float32)
     lam_prev = jnp.asarray(lam_prev, dtype=jnp.float32)
+    svc_clean, poisoned = sanitize_service_set(svc)
     if backend == "megakernel":
         from repro.kernels import ops
 
@@ -335,38 +362,58 @@ def solve_lambda_newton_warm(
             svc.alpha, svc.t_comp, b_total, lam_prev, use_pallas=True,
             iters=iters, inner_iters=inner_iters,
             newton_inner_iters=newton_inner_iters)
-        return DisbaResult(b=b, f=f, lam=lam, iterations=jnp.int32(iters),
-                           converged=jnp.bool_(True))
-    lam_hi0 = jnp.max(intra.p_max(svc))
-    warm_ok = jnp.logical_and(lam_prev > 0.0, lam_prev < lam_hi0)
-    lam0 = jnp.where(warm_ok, lam_prev, 0.5 * lam_hi0)
-
-    def body(_, state):
-        lam, lo, hi = state
-        d, slope, _ = _demand_slope_backend(svc, lam, newton_inner_iters,
-                                            backend)
-        resid = d - b_total
-        lo = jnp.where(resid > 0, lam, lo)   # demand too high -> raise price
-        hi = jnp.where(resid > 0, hi, lam)
-        step = resid / jnp.where(jnp.abs(slope) > _TINY, slope, -_TINY)
-        lam_newton = lam - step
-        # Non-strict bounds: a converged float32 iterate reproduces itself
-        # (lam_newton == lam == the endpoint just folded into the bracket);
-        # strict bounds would bounce it to the midpoint.
-        in_bracket = jnp.logical_and(lam_newton >= lo, lam_newton <= hi)
-        lam_next = jnp.where(in_bracket, lam_newton, 0.5 * (lo + hi))
-        return lam_next, lo, hi
-
-    lam, _, _ = jax.lax.fori_loop(
-        0, iters, body, (lam0, jnp.zeros_like(lam_hi0), lam_hi0))
-    if backend == "reference":
-        b = intra.demand(svc, lam, inner_iters)
     else:
-        _, _, b = _demand_slope_backend(svc, lam, inner_iters, backend)
-    b = b * (b_total / jnp.maximum(jnp.sum(b), _TINY))
+        lam_hi0 = jnp.max(intra.p_max(svc))
+        warm_ok = jnp.logical_and(lam_prev > 0.0, lam_prev < lam_hi0)
+        lam0 = jnp.where(warm_ok, lam_prev, 0.5 * lam_hi0)
+
+        def body(_, state):
+            lam, lo, hi = state
+            d, slope, _ = _demand_slope_backend(svc, lam, newton_inner_iters,
+                                                backend)
+            resid = d - b_total
+            lo = jnp.where(resid > 0, lam, lo)  # demand too high: raise price
+            hi = jnp.where(resid > 0, hi, lam)
+            step = resid / jnp.where(jnp.abs(slope) > _TINY, slope, -_TINY)
+            lam_newton = lam - step
+            # Non-strict bounds: a converged float32 iterate reproduces
+            # itself (lam_newton == lam == the endpoint just folded into the
+            # bracket); strict bounds would bounce it to the midpoint.
+            in_bracket = jnp.logical_and(lam_newton >= lo, lam_newton <= hi)
+            lam_next = jnp.where(in_bracket, lam_newton, 0.5 * (lo + hi))
+            return lam_next, lo, hi
+
+        lam, _, _ = jax.lax.fori_loop(
+            0, iters, body, (lam0, jnp.zeros_like(lam_hi0), lam_hi0))
+        if backend == "reference":
+            b = intra.demand(svc, lam, inner_iters)
+        else:
+            _, _, b = _demand_slope_backend(svc, lam, inner_iters, backend)
+        b = b * (b_total / jnp.maximum(jnp.sum(b), _TINY))
+        f = intra.freq(svc, b, inner_iters)
+
+    out_finite = jnp.logical_and(
+        jnp.isfinite(lam),
+        jnp.logical_and(jnp.all(jnp.isfinite(b)), jnp.all(jnp.isfinite(f))))
+    bad = jnp.logical_or(poisoned,
+                         jnp.logical_or(~jnp.isfinite(lam_prev), ~out_finite))
+
+    def _rescue(_):
+        lam_hi = jnp.max(intra.p_max(svc_clean))
+
+        def h(lam_r):
+            return (jnp.sum(intra.demand(svc_clean, lam_r, inner_iters))
+                    - b_total)
+
+        lam_r = intra._bisect(h, jnp.zeros_like(lam_hi), lam_hi, BISECT_ITERS)
+        b_r = intra.demand(svc_clean, lam_r, inner_iters)
+        b_r = b_r * (b_total / jnp.maximum(jnp.sum(b_r), _TINY))
+        return b_r, intra.freq(svc_clean, b_r, inner_iters), lam_r
+
+    b, f, lam = jax.lax.cond(bad, _rescue, lambda _: (b, f, lam), None)
     return DisbaResult(
-        b=b, f=intra.freq(svc, b, inner_iters), lam=lam,
-        iterations=jnp.int32(iters), converged=jnp.bool_(True),
+        b=b, f=f, lam=lam, iterations=jnp.int32(iters),
+        converged=jnp.bool_(True), fallback=bad,
     )
 
 

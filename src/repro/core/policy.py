@@ -349,6 +349,26 @@ def _coop(*, intra_backend: str = "reference", iters: int = BISECT_ITERS, **_):
     return fn
 
 
+class WarmDualState(NamedTuple):
+    """Carry of the warm-started coop policy: the previous period's dual
+    price plus a running count of cold-bisection rescues
+    (``DisbaResult.fallback`` events -- non-finite inputs/seed/outputs).
+    Fixed-shape, so it threads through ``lax.scan`` and checkpoints like the
+    old scalar carry did."""
+
+    lam: jax.Array        # () float32 dual price (WARM_COLD = no seed)
+    fallbacks: jax.Array  # () int32 cumulative solver fallbacks
+
+
+def fallback_count(pol_state) -> int:
+    """Cumulative solver-fallback count carried in a policy state (0 for
+    policies without one) -- the control plane mirrors this into its
+    ``solver_fallbacks`` metric."""
+    if isinstance(pol_state, WarmDualState):
+        return int(pol_state.fallbacks)
+    return 0
+
+
 @register_stateful("coop")
 def _coop_warm(*, intra_backend: str = "reference", iters: int = BISECT_ITERS,
                **_):
@@ -364,19 +384,24 @@ def _coop_warm(*, intra_backend: str = "reference", iters: int = BISECT_ITERS,
                else "reference")
 
     def init_state(n: int):
-        return jnp.float32(disba.WARM_COLD)
+        return WarmDualState(lam=jnp.float32(disba.WARM_COLD),
+                             fallbacks=jnp.int32(0))
 
-    def step(svc: ServiceSet, b_total, lam_prev):
+    def step(svc: ServiceSet, b_total, state):
         res = disba.solve_lambda_newton_warm(
-            svc, b_total, lam_prev, inner_iters=iters, backend=backend)
+            svc, b_total, state.lam, inner_iters=iters, backend=backend)
         # megakernel emits f from the same launch; reference's res.f is
         # already the reference evaluation.
         f = (res.f if intra_backend in ("reference", "megakernel")
              else _freq(svc, res.b))
         # Only carry the price out of periods that actually cleared a market;
         # an all-inactive period would otherwise poison the seed with 0.
-        lam_next = jnp.where(jnp.any(svc.service_active()), res.lam, lam_prev)
-        return res.b, f, lam_next
+        lam_next = jnp.where(jnp.any(svc.service_active()), res.lam, state.lam)
+        state_next = WarmDualState(
+            lam=lam_next,
+            fallbacks=state.fallbacks
+            + jnp.asarray(res.fallback, jnp.int32))
+        return res.b, f, state_next
 
     return StatefulPolicy(init_state=init_state, step=step)
 

@@ -93,6 +93,9 @@ class Decision(NamedTuple):
     f: np.ndarray          # (capacity,) rounds/s
     active: np.ndarray     # (capacity,) bool
     stale: bool            # True: previous clear rescaled, not a fresh solve
+    # True: the O(1) equal-share emergency policy (stale-streak overflow or
+    # a non-finite solver output), flagged distinctly from plain staleness.
+    degraded: bool = False
 
 
 @functools.lru_cache(maxsize=None)
@@ -173,11 +176,25 @@ class ControlPlane:
         self.retired: list[_SlotRecord] = []
         self._free = list(range(n))
         self.replayable = True      # falsified by slot reuse / forced retire
+        self.unreplayable_reasons: list[str] = []
+        # period -> [[slot, client], ...] heartbeat-timeout drops, recorded
+        # so a masked episode still replays bitwise (run_scan's ``avail``).
+        self._hb_drops: dict[int, list[list[int]]] = {}
         self.metrics = {
             "decisions": 0, "stale_decisions": 0, "admitted": 0,
             "retired": 0, "rejected": 0, "heartbeat_drops": 0,
+            # Robustness counters (PR 8): none of these ever move on a
+            # healthy run -- each marks a counted, never-silent degradation.
+            "solver_fallbacks": 0, "nonfinite_decisions": 0,
+            "degraded_decisions": 0, "carry_repairs": 0,
+            "checkpoint_skips": 0, "admit_retries": 0,
         }
         self.decisions: list[Decision] = []
+
+    def _mark_unreplayable(self, reason: str) -> None:
+        self.replayable = False
+        if reason not in self.unreplayable_reasons:
+            self.unreplayable_reasons.append(reason)
 
     # -- admission / retirement -------------------------------------------
 
@@ -211,7 +228,7 @@ class ControlPlane:
         slot = min(virgin) if virgin else min(self._free)
         self._free.remove(slot)
         if self._arrivals[slot] != NEVER:
-            self.replayable = False
+            self._mark_unreplayable("slot reuse")
         self._arrivals[slot] = self._period
         self._counts[slot] = n_clients
         self._last_seen[slot, :] = self._period
@@ -232,7 +249,7 @@ class ControlPlane:
         rec.retired_period = self._period
         self.retired.append(rec)
         self.metrics["retired"] += 1
-        self.replayable = False
+        self._mark_unreplayable("forced retire")
         self._counts[rec.slot] = 0
 
     # -- heartbeats --------------------------------------------------------
@@ -255,32 +272,47 @@ class ControlPlane:
 
     def _heartbeat_mask(self) -> np.ndarray:
         """(capacity, k_max) availability from heartbeat ages.  All-True when
-        liveness tracking is off -- a bitwise no-op inside the step."""
+        liveness tracking is off -- a bitwise no-op inside the step.
+
+        Only drops of *live, enrolled* clients can perturb the clear:
+        inactive rows are zeroed whole by the activity rule and columns
+        ``k >= counts`` by the base client mask, so everything else is forced
+        True.  That keeps the mask's non-identity entries sparse, and they
+        are recorded per period in ``_hb_drops`` -- ``replay_reference``
+        feeds them back through ``run_scan(avail=...)``, so a
+        heartbeat-masked episode still replays bitwise."""
         timeout = self.cfg.heartbeat_timeout_periods
         if timeout is None:
             return np.ones((self.cfg.capacity, self.cfg.k_max), bool)
         avail = (self._period - self._last_seen) <= timeout
-        # Count drops only over clients of currently-registered services:
-        # completed/retired slots keep their arrays (the replay needs them)
-        # but their stale heartbeat ages are not live drops.
         live = np.zeros((self.cfg.capacity, 1), bool)
-        for rec in self.services.values():
+        for rec in list(self.services.values()):
             live[rec.slot, 0] = True
         enrolled = np.arange(self.cfg.k_max)[None, :] < self._counts[:, None]
-        dropped = int(np.sum(~avail & live & enrolled))
+        eff = np.where(live & enrolled, avail, True)
+        dropped = int(np.sum(~eff))
         self.metrics["heartbeat_drops"] += dropped
         if dropped:
-            # A non-identity availability mask entered the clear: run_scan
-            # has no heartbeat channel, so the episode stops being
-            # expressible as one offline trace.
-            self.replayable = False
-        return avail
+            slots, clients = np.nonzero(~eff)
+            self._hb_drops[self._period] = [
+                [int(s), int(c)] for s, c in zip(slots, clients)]
+        return eff
 
     # -- the period step ---------------------------------------------------
 
     def tick(self) -> Decision:
         """Run one period: heartbeat-derived churn, the compiled clear,
-        completion-based retirement, trace bookkeeping."""
+        completion-based retirement, trace bookkeeping.
+
+        Hardened (chaos-tested): a non-finite solver output is never served
+        -- the period degrades to the O(1) equal-share decision, counted in
+        ``nonfinite_decisions``; any non-finite values left in the carry are
+        healed afterwards (``carry_repairs``) so one poisoned period cannot
+        cascade; warm-solver cold-bisection rescues are mirrored from the
+        policy carry into ``solver_fallbacks``.  Each of those also falsifies
+        ``replayable`` -- an injected fault is not part of the recorded
+        trace, so the offline replay could no longer match.
+        """
         period = self._period
         hb = self._heartbeat_mask()
         out = self._step(
@@ -294,11 +326,46 @@ class ControlPlane:
         self._rounds_done = np.asarray(out[0])
         self._period = period + 1
         self._retire_finished()
-        decision = Decision(period=period, b=b, f=f, active=active,
-                            stale=False)
+        fallbacks = policy_mod.fallback_count(self._carry[4])
+        if fallbacks > self.metrics["solver_fallbacks"]:
+            self.metrics["solver_fallbacks"] = fallbacks
+            self._mark_unreplayable("solver fallback (non-finite inputs)")
+        if self._repair_carry():
+            self._mark_unreplayable("carry repaired after non-finite values")
+        if not (np.all(np.isfinite(b)) and np.all(np.isfinite(f))):
+            self.metrics["nonfinite_decisions"] += 1
+            self.metrics["degraded_decisions"] += 1
+            self._mark_unreplayable("non-finite solver output")
+            decision = self._equal_share(period, stale=False)
+        else:
+            decision = Decision(period=period, b=b, f=f, active=active,
+                                stale=False)
         self.metrics["decisions"] += 1
         self.decisions.append(decision)
         return decision
+
+    def _repair_carry(self) -> int:
+        """Replace non-finite float entries anywhere in the serving carry
+        with 0 (for the warm dual price, 0 means "cold seed next period").
+        Returns the number of entries healed, mirrored into
+        ``metrics['carry_repairs']`` -- 0 on every healthy tick."""
+        leaves, treedef = jax.tree.flatten(self._carry)
+        healed = 0
+        out = []
+        for leaf in leaves:
+            arr = np.asarray(leaf)
+            if np.issubdtype(arr.dtype, np.floating):
+                bad = ~np.isfinite(arr)
+                n_bad = int(bad.sum())
+                if n_bad:
+                    healed += n_bad
+                    arr = np.where(bad, np.zeros_like(arr), arr)
+                    leaf = jnp.asarray(arr)
+            out.append(leaf)
+        if healed:
+            self._carry = jax.tree.unflatten(treedef, out)
+            self.metrics["carry_repairs"] += healed
+        return healed
 
     def _retire_finished(self) -> None:
         """Completion-based departure (the simulator's own rule): a service
@@ -313,6 +380,15 @@ class ControlPlane:
             self._free.append(rec.slot)
             self.metrics["retired"] += 1
 
+    def _occupied(self) -> np.ndarray:
+        """(capacity,) live-slot mask from the registry.  Snapshots the
+        registry values first: the daemon may call this from the event loop
+        while a tick commits in an executor thread."""
+        occupied = np.zeros((self.cfg.capacity,), bool)
+        for rec in list(self.services.values()):
+            occupied[rec.slot] = True
+        return occupied
+
     def stale_decision(self) -> Decision:
         """Degraded decision for the current period: the previous clear
         rescaled to the live admission mask (budget-preserving), used by the
@@ -321,9 +397,7 @@ class ControlPlane:
         appended to ``decisions``: that list is the fresh-solve stream the
         differential replay checks; the daemon records what it served."""
         period = self._period
-        occupied = np.zeros((self.cfg.capacity,), bool)
-        for rec in self.services.values():
-            occupied[rec.slot] = True
+        occupied = self._occupied()
         if self.decisions:
             prev = self.decisions[-1]
             b = np.where(occupied, prev.b, 0.0)
@@ -331,14 +405,35 @@ class ControlPlane:
             if total > 0.0:
                 b = b * (self.net.total_bandwidth_mhz / total)
             f = np.where(occupied, prev.f, 0.0)
-        else:
-            # Nothing cleared yet: equal split over live slots.
-            n_live = max(int(occupied.sum()), 1)
-            b = np.where(occupied, self.net.total_bandwidth_mhz / n_live, 0.0)
-            f = np.zeros((self.cfg.capacity,), np.float32)
+            self.metrics["stale_decisions"] += 1
+            return Decision(period=period, b=b.astype(np.float32),
+                            f=f.astype(np.float32), active=occupied,
+                            stale=True)
+        # Nothing cleared yet: equal split over live slots.
         self.metrics["stale_decisions"] += 1
-        return Decision(period=period, b=b.astype(np.float32),
-                        f=f.astype(np.float32), active=occupied, stale=True)
+        return self._equal_share(period, stale=True, count=False)
+
+    def _equal_share(self, period: int, *, stale: bool,
+                     count: bool = False) -> Decision:
+        """The O(1) emergency allocation: B split equally over live slots,
+        f = 0 (no solve ran, so no frequency claim is honest)."""
+        occupied = self._occupied()
+        n_live = max(int(occupied.sum()), 1)
+        b = np.where(occupied, self.net.total_bandwidth_mhz / n_live, 0.0)
+        f = np.zeros((self.cfg.capacity,), np.float32)
+        if count:
+            self.metrics["degraded_decisions"] += 1
+        return Decision(period=period, b=b.astype(np.float32), f=f,
+                        active=occupied, stale=stale, degraded=True)
+
+    def degraded_decision(self) -> Decision:
+        """Emergency decision for the current period: equal share over the
+        live mask, used by the daemon once a stale streak exceeds its bound
+        (the previous clear is too old to keep rescaling).  Counted in
+        ``metrics['degraded_decisions']`` and flagged ``degraded`` --
+        distinct from plain staleness -- and, like ``stale_decision``, NOT
+        appended to the fresh-solve stream."""
+        return self._equal_share(self._period, stale=True, count=True)
 
     def allocation_of(self, service_id) -> dict:
         """Latest served (b, f) for one admitted service."""
@@ -375,16 +470,32 @@ class ControlPlane:
             collect_history=True, collect_alloc=True,
         )
 
+    def recorded_avail(self) -> np.ndarray | None:
+        """The recorded heartbeat-drop stream as run_scan's ``avail`` tensor
+        ((period, capacity, k_max) bool), or None when no drop was ever
+        recorded (an all-True plane would be a bitwise no-op anyway)."""
+        if not self._hb_drops:
+            return None
+        avail = np.ones((max(self._period, 1), self.cfg.capacity,
+                         self.cfg.k_max), bool)
+        for p, drops in self._hb_drops.items():
+            if p < avail.shape[0]:
+                for slot, client in drops:
+                    avail[p, slot, client] = False
+        return avail
+
     def replay_reference(self) -> dict:
-        """Run the offline reference on this daemon's recorded trace."""
+        """Run the offline reference on this daemon's recorded trace
+        (admissions + heartbeat-drop masks)."""
         if not self.replayable:
             raise RuntimeError(
-                "trace is not replayable as one run_scan episode (a slot was "
-                "reused, a service force-retired, or a heartbeat timeout "
-                "masked a client)")
+                "trace is not replayable as one run_scan episode (slot "
+                "reuse, forced retire, or an injected fault: "
+                f"{self.unreplayable_reasons or 'unknown'})")
         arrivals, counts = self.trace()
         return simulator.run_scan(self.replay_sim_config(), self.net,
-                                  arrivals=arrivals, counts=counts)
+                                  arrivals=arrivals, counts=counts,
+                                  avail=self.recorded_avail())
 
     # -- checkpointable state ---------------------------------------------
 
@@ -409,6 +520,8 @@ class ControlPlane:
             },
             "metrics": dict(self.metrics),
             "replayable": self.replayable,
+            "unreplayable_reasons": list(self.unreplayable_reasons),
+            "hb_drops": {str(p): d for p, d in self._hb_drops.items()},
         }
 
     def snapshot(self, manager: CheckpointManager) -> None:
@@ -417,11 +530,17 @@ class ControlPlane:
                      extra=self.registry_meta())
 
     def restore(self, manager: CheckpointManager) -> bool:
-        """Adopt the newest complete checkpoint; False when none exists."""
+        """Adopt the newest VERIFIABLE checkpoint; False when none survives.
+        Corrupted-but-committed steps the manager had to skip are surfaced
+        in ``metrics['checkpoint_skips']`` -- a skipped checkpoint costs
+        recovery time and is never silent."""
         step, tree, extra = manager.restore_latest(self.state_pytree())
+        skipped = len(getattr(manager, "last_skipped", ()))
         if step is None:
+            self.metrics["checkpoint_skips"] += skipped
             return False
         self.load_state(tree, extra)
+        self.metrics["checkpoint_skips"] += skipped
         return True
 
     def load_state(self, state: dict, meta: dict | None = None) -> None:
@@ -438,6 +557,7 @@ class ControlPlane:
         self._rounds_done = np.asarray(self._carry[0], np.int32)
         self.services.clear()
         self._free = []
+        self._hb_drops = {}
         if meta and "services" in meta:
             for rec in meta["services"].values():
                 rec = _SlotRecord(**rec)
@@ -445,6 +565,11 @@ class ControlPlane:
             if "metrics" in meta:
                 self.metrics.update(meta["metrics"])
             self.replayable = bool(meta.get("replayable", True))
+            self.unreplayable_reasons = list(
+                meta.get("unreplayable_reasons", []))
+            self._hb_drops = {int(p): [[int(s), int(c)] for s, c in drops]
+                              for p, drops in meta.get("hb_drops",
+                                                       {}).items()}
             occupied = {r.slot for r in self.services.values()}
         else:
             occupied = set()
@@ -457,6 +582,12 @@ class ControlPlane:
                     n_clients=int(self._counts[slot]),
                     admitted_period=int(self._arrivals[slot]))
                 occupied.add(slot)
+            if (self.cfg.heartbeat_timeout_periods is not None
+                    and self._period > 0):
+                # The array-only restore path has no heartbeat-drop record,
+                # so a liveness-tracked episode cannot be replayed soundly.
+                self._mark_unreplayable(
+                    "restored without a heartbeat-drop record")
         self._free = [s for s in range(self.cfg.capacity)
                       if s not in occupied]
 

@@ -286,8 +286,12 @@ def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
     active = jnp.logical_and(arrivals <= period, rounds_done < rounds_required)
     svc = mask_inactive(svc_full, active)
     b, f, pol_state = policy_fn(svc, net.total_bandwidth_mhz, pol_state)
+    # Integrity guard: a non-finite frequency (poisoned channel state under
+    # fault injection) must not corrupt the integer rounds_done carry --
+    # floor(NaN).astype(int32) is undefined.  Bitwise no-op on finite f.
+    f_rounds = jnp.where(jnp.isfinite(f), f, 0.0)
     rounds = jnp.maximum(
-        jnp.floor(f * jnp.float32(net.period_s)), 0.0
+        jnp.floor(f_rounds * jnp.float32(net.period_s)), 0.0
     ).astype(jnp.int32)
     rounds_done = jnp.minimum(
         rounds_done + jnp.where(active, rounds, 0), rounds_required
@@ -313,8 +317,8 @@ _EPISODE_STATICS = ("policy", "net", "n_total", "k_max", "rounds_required",
 _AGG_KEYS = ("freq_sum", "objective", "n_active", "n_clients")
 
 
-def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
-                  rounds_required, max_periods, n_bids, alpha_fair,
+def _episode_impl(arrivals, counts, key, avail=None, *, policy, net, n_total,
+                  k_max, rounds_required, max_periods, n_bids, alpha_fair,
                   intra_backend, warm_start, collect_history, collect_alloc,
                   channel, churn):
     pol = policy_mod.get_stateful_policy(
@@ -324,12 +328,17 @@ def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
     chan_proc = scenarios.get_channel(channel, net)
     churn_proc = scenarios.get_churn(churn, net)
 
-    def step(carry, period):
+    def step(carry, xs):
+        # ``avail`` (a recorded per-period availability stream, e.g. the
+        # control plane's heartbeat masks) rides the scan xs next to the
+        # period index; None -- every offline engine -- leaves the traced
+        # graph exactly as before.
+        period, extra_avail = xs if avail is not None else (xs, None)
         rounds_done, duration, chan_state, churn_state, pol_state, agg = carry
         (rounds_done, duration, chan_state, churn_state, pol_state,
          stats, extras) = _period_step(
             rounds_done, duration, chan_state, churn_state, pol_state, period,
-            arrivals, counts, key,
+            arrivals, counts, key, extra_avail,
             policy_fn=pol.step, chan_step=chan_proc.step,
             churn_step=churn_proc.step, chan_rebuilds=chan_proc.rebuilds,
             net=net, n_total=n_total, k_max=k_max,
@@ -362,9 +371,9 @@ def _episode_impl(arrivals, counts, key, *, policy, net, n_total, k_max,
             chan_proc.init(key, n_total, k_max),
             churn_proc.init(key, n_total, k_max),
             pol.init_state(n_total), agg0)
-    (rounds_done, duration, _, _, _, agg), hist = jax.lax.scan(
-        step, init, jnp.arange(max_periods, dtype=jnp.int32)
-    )
+    periods = jnp.arange(max_periods, dtype=jnp.int32)
+    xs = periods if avail is None else (periods, avail)
+    (rounds_done, duration, _, _, _, agg), hist = jax.lax.scan(step, init, xs)
     return rounds_done, duration, (hist if collect_history else agg)
 
 
@@ -438,7 +447,7 @@ def _episode_statics(cfg: SimConfig, net: network.NetworkConfig,
 
 
 def run_scan(cfg: SimConfig, net: network.NetworkConfig | None = None, *,
-             arrivals=None, counts=None) -> dict:
+             arrivals=None, counts=None, avail=None) -> dict:
     """Simulate one episode as a single compiled ``lax.scan``.
 
     Returns the same summary keys as ``run`` (avg_duration, durations,
@@ -451,6 +460,13 @@ def run_scan(cfg: SimConfig, net: network.NetworkConfig | None = None, *,
     reference engine: everything else (channel/churn draws, policy state)
     still comes from ``cfg.seed``'s episode key, so a daemon run on the same
     seed must match bitwise (tests/test_control_plane.py).
+
+    ``avail`` optionally adds a recorded per-period client-availability
+    stream, a ``(max_periods, n_services_total, k_max)`` bool tensor applied
+    on top of the churn process each period (``_period_step``'s
+    ``extra_avail`` hook).  The control plane records its heartbeat-timeout
+    masks and feeds them back here, so even a heartbeat-masked live episode
+    replays bitwise.  All-True planes are a bitwise no-op.
     """
     net = net or _default_net(cfg)
     if (arrivals is None) != (counts is None):
@@ -458,9 +474,17 @@ def run_scan(cfg: SimConfig, net: network.NetworkConfig | None = None, *,
     if arrivals is None:
         arrivals, counts = _static_draws(cfg, net)
     k_max = _k_cap(cfg)
+    if avail is not None:
+        avail = jnp.asarray(avail, bool)
+        want = (cfg.max_periods, cfg.n_services_total, k_max)
+        if avail.shape != want:
+            raise ValueError(
+                f"avail must have shape (max_periods, n_services_total, "
+                f"k_max) = {want}, got {avail.shape}")
     rounds_done, duration, hist = _episode(
         jnp.asarray(arrivals, jnp.int32), jnp.asarray(counts, jnp.int32),
-        jax.random.key(cfg.seed + 7), **_episode_statics(cfg, net, k_max),
+        jax.random.key(cfg.seed + 7), avail,
+        **_episode_statics(cfg, net, k_max),
     )
     return _summarize(cfg, rounds_done, duration, hist)
 

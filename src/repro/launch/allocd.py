@@ -19,6 +19,15 @@ Requests that arrive while a solve is in flight stay queued and apply at
 the next idle drain -- the state the solver reads is never mutated
 concurrently.
 
+Degradation paths are bounded and counted (never silent): capacity-full
+admissions retry with exponential period backoff before landing in
+``rejections``; a stale streak longer than ``max_stale_streak`` degrades to
+the O(1) equal-share decision; non-finite solver outputs are caught by the
+plane and every such event lands in the end-of-run metrics line
+(``solver_fallbacks`` / ``degraded_decisions`` / ...).  All of these paths
+are exercised under seeded fault injection by ``repro.chaos`` (injector
+catalogue, replay-from-seed instructions: EXPERIMENTS.md §Chaos drills).
+
 Usage (synthetic Poisson workload, prints a serving summary + differential
 replay check against ``simulator.run_scan``):
 
@@ -72,26 +81,65 @@ class AllocDaemon:
                  net: network.NetworkConfig | None = None, *,
                  solver_timeout_s: float | None = None,
                  manager: CheckpointManager | None = None,
-                 save_every: int = 10):
+                 save_every: int = 10,
+                 max_stale_streak: int = 8,
+                 admit_max_retries: int = 3):
         self.plane = ControlPlane(cfg, net)
         self.solver_timeout_s = solver_timeout_s
         self.manager = manager
         self.save_every = max(int(save_every), 1)
+        self.max_stale_streak = max(int(max_stale_streak), 1)
+        self.admit_max_retries = max(int(admit_max_retries), 0)
         self.requests: asyncio.Queue = asyncio.Queue()
         self.served: list[Decision] = []
         self.rejections: list[tuple[Any, str]] = []
+        # Capacity-rejected admits awaiting retry: (request, attempts,
+        # not-before period) -- exponential backoff in periods.
+        self._retry_queue: list[tuple[Admit, int, int]] = []
+        self.stale_streak = 0
         self.resumed = bool(manager and self.plane.restore(manager))
         self._pending: asyncio.Future | None = None
         # Test hook: extra seconds of solver latency injected inside the
         # executor call, to exercise the timeout -> stale path.
         self._solver_delay_s = 0.0
+        # Chaos hook: force the next step_period to skip awaiting the solve
+        # and serve stale -- a *deterministic* deadline miss (wall-clock
+        # timeouts are not replayable; src/repro/chaos drives this).
+        self._force_stale_next = False
 
     def submit(self, request) -> None:
         self.requests.put_nowait(request)
 
+    def _try_admit(self, req: Admit, attempts: int) -> None:
+        """Admit with bounded retry: a capacity rejection (transient -- a
+        slot may free up) re-queues the request with exponential period
+        backoff (1, 2, 4, ... periods, ``admit_max_retries`` attempts);
+        validation errors (duplicate id, bad n_clients) are permanent and
+        land in ``rejections`` immediately."""
+        try:
+            self.plane.admit(req.service_id, req.n_clients)
+        except RuntimeError as exc:
+            if attempts < self.admit_max_retries:
+                self.plane.metrics["admit_retries"] += 1
+                self._retry_queue.append(
+                    (req, attempts + 1, self.plane.period + 2 ** attempts))
+            else:
+                self.rejections.append(
+                    (req.service_id,
+                     f"RuntimeError: {exc} (gave up after {attempts} "
+                     f"retries)"))
+        except (ValueError, KeyError) as exc:
+            self.rejections.append((req.service_id,
+                                    f"{type(exc).__name__}: {exc}"))
+
     def _drain(self) -> None:
         """Apply every queued request; called only while no solve is in
         flight, so the compiled step never races a registry mutation."""
+        period = self.plane.period
+        due = [r for r in self._retry_queue if r[2] <= period]
+        self._retry_queue = [r for r in self._retry_queue if r[2] > period]
+        for req, attempts, _ in due:
+            self._try_admit(req, attempts)
         while True:
             try:
                 req = self.requests.get_nowait()
@@ -99,7 +147,7 @@ class AllocDaemon:
                 return
             try:
                 if isinstance(req, Admit):
-                    self.plane.admit(req.service_id, req.n_clients)
+                    self._try_admit(req, 0)
                 elif isinstance(req, Retire):
                     self.plane.retire(req.service_id)
                 elif isinstance(req, Heartbeat):
@@ -117,20 +165,39 @@ class AllocDaemon:
 
     async def step_period(self) -> Decision:
         """Serve one decision.  Launches a solve when idle; if the pending
-        solve outruns ``solver_timeout_s``, serves a stale decision instead
-        and leaves the solve to commit in the background."""
-        if self._pending is None:
-            self._drain()
-            loop = asyncio.get_running_loop()
-            self._pending = loop.run_in_executor(None, self._tick_blocking)
-        try:
-            decision = await asyncio.wait_for(
-                asyncio.shield(self._pending), self.solver_timeout_s)
-            self._pending = None
-            if self.manager and self.plane.period % self.save_every == 0:
-                self.plane.snapshot(self.manager)
-        except asyncio.TimeoutError:
-            decision = self.plane.stale_decision()
+        solve outruns ``solver_timeout_s`` (or a chaos-injected deadline
+        miss fires), serves a stale decision instead and leaves the solve to
+        commit in the background.  A stale streak is bounded: after
+        ``max_stale_streak`` consecutive non-fresh periods the daemon stops
+        rescaling an ever-older clear and degrades to the O(1) equal-share
+        decision (counted in ``degraded_decisions``, flagged distinctly)."""
+        decision = None
+        if self._force_stale_next:
+            # Deterministic deadline miss: the solve is not even launched
+            # this period, so no background commit races the stale serve --
+            # the whole trajectory stays replayable from the chaos seed.
+            self._force_stale_next = False
+        else:
+            if self._pending is None:
+                self._drain()
+                loop = asyncio.get_running_loop()
+                self._pending = loop.run_in_executor(
+                    None, self._tick_blocking)
+            try:
+                decision = await asyncio.wait_for(
+                    asyncio.shield(self._pending), self.solver_timeout_s)
+                self._pending = None
+                self.stale_streak = 0
+                if self.manager and self.plane.period % self.save_every == 0:
+                    self.plane.snapshot(self.manager)
+            except asyncio.TimeoutError:
+                pass
+        if decision is None:
+            self.stale_streak += 1
+            if self.stale_streak >= self.max_stale_streak:
+                decision = self.plane.degraded_decision()
+            else:
+                decision = self.plane.stale_decision()
         self.served.append(decision)
         return decision
 
@@ -227,10 +294,20 @@ def main(argv: list[str] | None = None) -> None:
           f"rejected={m['rejected'] + len(daemon.rejections)} "
           f"stale_decisions={m['stale_decisions']} "
           f"heartbeat_drops={m['heartbeat_drops']}")
+    # Degradation counters -- all zero on a healthy run, and none of them is
+    # ever silent (ISSUE 8): solver fallbacks, equal-share degradations,
+    # non-finite catches, carry repairs, skipped checkpoints, admit retries.
+    print(f"[allocd] solver_fallbacks={m['solver_fallbacks']} "
+          f"degraded_decisions={m['degraded_decisions']} "
+          f"nonfinite_decisions={m['nonfinite_decisions']} "
+          f"carry_repairs={m['carry_repairs']} "
+          f"checkpoint_skips={m['checkpoint_skips']} "
+          f"admit_retries={m['admit_retries']}")
     if args.check:
         if not daemon.plane.replayable:
-            print("[allocd] trace not replayable (slot reuse, forced retire, "
-                  "or heartbeat-masked clear)")
+            reasons = (daemon.plane.unreplayable_reasons
+                       or ["slot reuse / forced retire"])
+            print(f"[allocd] trace not replayable ({reasons})")
             return
         ref = daemon.plane.replay_reference()
         b_ref = np.asarray(ref["history"]["b"])

@@ -1,0 +1,160 @@
+"""Checkpoint hardening contracts: idempotent re-save, per-shard checksum
+verification, and ``restore_latest`` skipping past committed-but-corrupted
+steps instead of crashing the restart loop (PR 8)."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(x: float) -> dict:
+    return {"w": jnp.arange(12, dtype=jnp.float32) * jnp.float32(x),
+            "step": jnp.int32(int(x))}
+
+
+def _shard(mgr: CheckpointManager, step: int) -> str:
+    return os.path.join(mgr._step_dir(step), "shard_0000.npz")
+
+
+def _commit(mgr: CheckpointManager, step: int) -> str:
+    return os.path.join(mgr._step_dir(step), "COMMIT")
+
+
+def test_save_restore_roundtrip_with_checksums(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, _tree(3.0), extra={"tag": "x"})
+    with open(os.path.join(mgr._step_dir(3), "meta.json")) as f:
+        meta = json.load(f)
+    assert "shard_0000.npz" in meta["shard_checksums"]
+    ok, reason = mgr.verify_step(3)
+    assert ok, reason
+    tree, extra = mgr.restore(3, _tree(0.0))
+    np.testing.assert_array_equal(tree["w"], np.asarray(_tree(3.0)["w"]))
+    assert extra == {"tag": "x"}
+
+
+def test_resave_same_step_is_idempotent(tmp_path):
+    """Regression: re-saving an existing step (a restarted daemon replaying
+    its last period) used to crash on the existing directory.  It must swap
+    atomically and serve the NEW payload."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, _tree(1.0))
+    mgr.save(5, _tree(2.0))        # same step, new content -- must not raise
+    assert mgr.all_steps() == [5]
+    ok, reason = mgr.verify_step(5)
+    assert ok, reason
+    tree, _ = mgr.restore(5, _tree(0.0))
+    np.testing.assert_array_equal(tree["w"], np.asarray(_tree(2.0)["w"]))
+    # no .old or temp residue left behind
+    residue = [n for n in os.listdir(tmp_path)
+               if n.endswith(".old") or n.startswith(".tmp_")]
+    assert residue == []
+
+
+def test_checksum_detects_flipped_byte(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))
+    shard = _shard(mgr, 1)
+    size = os.path.getsize(shard)
+    with open(shard, "r+b") as f:
+        f.seek(size // 2)
+        byte = f.read(1)
+        f.seek(size // 2)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    ok, reason = mgr.verify_step(1)
+    assert not ok and "checksum" in reason
+    with pytest.raises(IOError, match="corrupted"):
+        mgr.restore(1, _tree(0.0))
+
+
+def test_restore_latest_skips_corrupted_newest(tmp_path):
+    """The headline degradation path: COMMIT present but the shard truncated
+    underneath it -- restore_latest must fall back to the next-older step and
+    record the skip, never crash and never serve garbage."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(10, _tree(10.0))
+    mgr.save(20, _tree(20.0))
+    shard = _shard(mgr, 20)
+    with open(shard, "r+b") as f:
+        f.truncate(os.path.getsize(shard) // 2)
+    assert os.path.exists(_commit(mgr, 20))        # still "committed"
+    step, tree, _ = mgr.restore_latest(_tree(0.0))
+    assert step == 10
+    np.testing.assert_array_equal(tree["w"], np.asarray(_tree(10.0)["w"]))
+    assert [s for s, _ in mgr.last_skipped] == [20]
+    assert "checksum" in mgr.last_skipped[0][1]
+
+
+def test_restore_latest_ignores_torn_write(tmp_path):
+    """A step without COMMIT (torn write) is invisible: not restored, not
+    even counted as a skip -- it never claimed completeness."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))
+    mgr.save(2, _tree(2.0))
+    os.remove(_commit(mgr, 2))
+    assert mgr.all_steps() == [1]
+    step, tree, _ = mgr.restore_latest(_tree(0.0))
+    assert step == 1 and mgr.last_skipped == []
+
+
+def test_restore_latest_none_survives(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))
+    shard = _shard(mgr, 1)
+    with open(shard, "r+b") as f:
+        f.truncate(1)
+    step, tree, extra = mgr.restore_latest(_tree(7.0))
+    assert step is None and extra == {}
+    np.testing.assert_array_equal(tree["w"], np.asarray(_tree(7.0)["w"]))
+    assert len(mgr.last_skipped) == 1
+
+
+def test_crash_mid_save_preserves_older_step(tmp_path, monkeypatch):
+    """A crash during save (simulated: rename blows up) must leave the
+    previous checkpoint intact and clean up its temp directory."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))
+
+    def boom(*args, **kwargs):
+        raise OSError("disk gone")
+
+    monkeypatch.setattr(os, "rename", boom)
+    with pytest.raises(OSError, match="disk gone"):
+        mgr.save(2, _tree(2.0))
+    monkeypatch.undo()
+    assert not [n for n in os.listdir(tmp_path) if n.startswith(".tmp_")]
+    step, tree, _ = mgr.restore_latest(_tree(0.0))
+    assert step == 1
+    np.testing.assert_array_equal(tree["w"], np.asarray(_tree(1.0)["w"]))
+
+
+def test_new_manager_sweeps_orphaned_tmp_dirs(tmp_path):
+    os.makedirs(tmp_path / ".tmp_orphan")
+    (tmp_path / ".tmp_orphan" / "shard_0000.npz").write_bytes(b"junk")
+    CheckpointManager(str(tmp_path))
+    assert not (tmp_path / ".tmp_orphan").exists()
+
+
+def test_precheckchecksum_meta_falls_back_to_load_check(tmp_path):
+    """Checkpoints written before shard checksums existed (no
+    ``shard_checksums`` in meta) still verify via a decompress-and-index
+    check, so old snapshots stay restorable."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))
+    meta_path = os.path.join(mgr._step_dir(1), "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["shard_checksums"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    ok, reason = mgr.verify_step(1)
+    assert ok, reason
+    shard = _shard(mgr, 1)
+    with open(shard, "r+b") as f:
+        f.truncate(os.path.getsize(shard) // 2)
+    ok, reason = mgr.verify_step(1)
+    assert not ok

@@ -96,8 +96,15 @@ def test_heartbeat_timeout_drops_then_reclears():
         if period >= 2:                      # past the 1-period timeout
             starved.append((d, t))
     assert plane.metrics["heartbeat_drops"] > 0
-    # A masked clear is no longer expressible as one offline trace.
-    assert not plane.replayable
+    # The drops are recorded per period, so the masked episode is STILL
+    # replayable: run_scan fed the recorded ``avail`` planes reproduces the
+    # served stream bitwise (PR 8 -- drops no longer falsify the trace).
+    assert plane.replayable
+    assert plane.recorded_avail() is not None
+    ref = plane.replay_reference()
+    b_ref = np.asarray(ref["history"]["b"])
+    for d in plane.decisions:
+        np.testing.assert_array_equal(np.asarray(d.b), b_ref[d.period])
     # Dropping every client of "a" must change the clear vs the healthy twin.
     assert any(not np.array_equal(d.b, t.b) for d, t in starved)
     # Re-clear: once "a" heartbeats again its cohort re-enters the solve.
@@ -216,8 +223,11 @@ def test_daemon_stale_decision_on_deadline_miss():
 
 
 def test_daemon_records_rejections_instead_of_raising():
+    # admit_max_retries=0 keeps capacity rejections immediate (the retry
+    # path is covered by tests/test_chaos.py)
     daemon = allocd.AllocDaemon(ControlPlaneConfig(capacity=1, k_max=4,
-                                                   rounds_required=10_000))
+                                                   rounds_required=10_000),
+                                admit_max_retries=0)
 
     async def drive():
         daemon.submit(allocd.Admit("a", 3))
@@ -229,6 +239,34 @@ def test_daemon_records_rejections_instead_of_raising():
     asyncio.run(drive())
     assert len(daemon.rejections) == 2
     assert daemon.plane.metrics["admitted"] == 1
+
+
+def test_daemon_capacity_rejection_retries_before_giving_up():
+    """With retries enabled, a full-capacity admit is queued with period
+    backoff instead of rejected on the spot -- and only rejected once the
+    bounded attempts are exhausted."""
+    daemon = allocd.AllocDaemon(ControlPlaneConfig(capacity=1, k_max=4,
+                                                   rounds_required=10_000),
+                                admit_max_retries=2)
+
+    async def drive():
+        daemon.submit(allocd.Admit("a", 3))
+        daemon.submit(allocd.Admit("b", 3))      # no free slot -> queued
+        await daemon.step_period()
+        first = len(daemon.rejections)
+        # backoff is 1 then 2 periods; by period 4 both retries have fired
+        for _ in range(4):
+            await daemon.step_period()
+        await daemon.close()
+        return first
+
+    rejected_at_first_period = asyncio.run(drive())
+    assert rejected_at_first_period == 0
+    assert daemon._retry_queue == []
+    assert daemon.plane.metrics["admit_retries"] >= 2
+    assert len(daemon.rejections) == 1
+    sid, reason = daemon.rejections[0]
+    assert sid == "b" and "gave up after 2 retries" in reason
 
 
 def test_daemon_checkpoint_restart_resumes(tmp_path):

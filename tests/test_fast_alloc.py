@@ -227,16 +227,18 @@ def test_warm_coop_step_carries_dual_price():
     svc = _masked_fixed_capacity_set(2)
     pol = policy.get_stateful_policy("coop", warm_start=True)
     state = pol.init_state(svc.n_services)
-    assert float(state) == disba.WARM_COLD
+    assert float(state.lam) == disba.WARM_COLD
+    assert int(state.fallbacks) == 0
     b, f, state = pol.step(svc, B, state)
     ref = disba.solve_lambda_bisect(svc, B)
     np.testing.assert_allclose(np.asarray(b), np.asarray(ref.b),
                                rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(float(state), float(ref.lam), rtol=1e-4)
+    np.testing.assert_allclose(float(state.lam), float(ref.lam), rtol=1e-4)
+    assert int(state.fallbacks) == 0    # healthy steps never count a rescue
     # an all-inactive period must NOT poison the carried price
     none = mask_inactive(svc, jnp.zeros((svc.n_services,), bool))
     _, _, state2 = pol.step(none, B, state)
-    assert float(state2) == float(state)
+    assert float(state2.lam) == float(state.lam)
 
 
 def test_stateful_policy_unknown_option_raises():
@@ -317,8 +319,8 @@ def test_legacy_run_matches_scan_with_warm_start():
     scan = simulator.run_scan(cfg)
     assert legacy["finished"] and scan["finished"]
     assert scan["durations"] == legacy["durations"]
-    # the dual price rides in the snapshot
-    assert len(legacy["state"]["pol_state"]) == 1
+    # the dual price (plus the fallback counter) rides in the snapshot
+    assert len(legacy["state"]["pol_state"]) == 2
 
 
 def test_legacy_warm_checkpoint_resume_is_exact(tmp_path):

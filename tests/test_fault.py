@@ -60,6 +60,41 @@ def test_resumable_loop_replay_bound(tmp_path, fail_at, expected_replayed):
     assert np.array_equal(np.asarray(final), np.asarray(clean))
 
 
+def test_resumable_loop_post_step_crash_bound(tmp_path):
+    """``fail_phase="post_step"`` dies in the torn-write window: the step
+    completed but its state was never committed.  Resume must replay it from
+    the last checkpoint, land bit-identical to a clean run, and lose at most
+    ``save_every`` steps of work (one more than the pre-step bound -- the
+    finished-but-unsaved step itself)."""
+    n_steps, save_every, fail_at = 10, 3, 5
+    clean = _clean_run(tmp_path, n_steps, save_every)
+
+    mgr = CheckpointManager(tmp_path / "crash_post")
+    policy = fault.RestartPolicy(save_every=save_every)
+    log = []
+    with pytest.raises(RuntimeError, match="after step 5 .pre-commit."):
+        fault.resumable_loop(_make_step(log), jnp.float32(1.0), n_steps, mgr,
+                             policy, fail_at=fail_at, fail_phase="post_step")
+    # The crashing step DID run before the process died.
+    assert log == list(range(fail_at + 1))
+    # Newest surviving checkpoint predates the crash (step 3, after t=2).
+    assert mgr.all_steps()[-1] == 3
+    resumed_log = []
+    final = fault.resumable_loop(_make_step(resumed_log), jnp.float32(1.0),
+                                 n_steps, mgr, policy)
+    replayed = [t for t in resumed_log if t <= fail_at]
+    assert replayed == [3, 4, 5]
+    assert len(replayed) <= save_every
+    assert np.array_equal(np.asarray(final), np.asarray(clean))
+
+
+def test_resumable_loop_rejects_unknown_fail_phase(tmp_path):
+    with pytest.raises(ValueError, match="fail_phase"):
+        fault.resumable_loop(_make_step([]), jnp.float32(1.0), 2,
+                             CheckpointManager(tmp_path / "x"),
+                             fail_at=1, fail_phase="mid_step")
+
+
 def test_restart_policy_default_not_shared():
     """Regression for the def-time-evaluated ``policy=RestartPolicy()``
     default: the signature default must be None (fresh instance per call),

@@ -168,13 +168,15 @@ def test_stateful_policy_megakernel_step_matches_reference():
     pol = policy.get_stateful_policy("coop", warm_start=True,
                                      intra_backend="megakernel")
     pol_ref = policy.get_stateful_policy("coop", warm_start=True)
-    b, f, lam = pol.step(svc, B, pol.init_state(svc.n_services))
-    b_r, f_r, lam_r = pol_ref.step(svc, B, pol_ref.init_state(svc.n_services))
+    b, f, state = pol.step(svc, B, pol.init_state(svc.n_services))
+    b_r, f_r, state_r = pol_ref.step(svc, B,
+                                     pol_ref.init_state(svc.n_services))
     np.testing.assert_allclose(np.asarray(b), np.asarray(b_r),
                                rtol=1e-3, atol=1e-4)
     np.testing.assert_allclose(np.asarray(f), np.asarray(f_r),
                                rtol=1e-3, atol=1e-5)
-    np.testing.assert_allclose(float(lam), float(lam_r), rtol=1e-4)
+    np.testing.assert_allclose(float(state.lam), float(state_r.lam),
+                               rtol=1e-4)
 
 
 def test_simulator_scan_megakernel_traces_once():

@@ -20,7 +20,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: tables,static,longterm,scale,"
-                         "allocation,fleet,cotrain,serve,fault,roofline")
+                         "allocation,fleet,cotrain,serve,fault,robust,"
+                         "roofline")
     ap.add_argument("--full", action="store_true",
                     help="paper-sized long-term sims (slow)")
     args = ap.parse_args()
@@ -42,9 +43,9 @@ def main() -> None:
                   flush=True)
 
     from benchmarks import (allocator_scale, bench_allocation, bench_fault,
-                            bench_fleet, bench_serve, paper_figs_cotrain,
-                            paper_figs_longterm, paper_figs_static,
-                            paper_tables, roofline)
+                            bench_fleet, bench_robust, bench_serve,
+                            paper_figs_cotrain, paper_figs_longterm,
+                            paper_figs_static, paper_tables, roofline)
 
     section("tables", paper_tables.run)
     section("static", paper_figs_static.run)
@@ -55,6 +56,7 @@ def main() -> None:
     section("cotrain", lambda: paper_figs_cotrain.run_rows(tiny=not args.full))
     section("serve", lambda: bench_serve.run_rows(tiny=not args.full))
     section("fault", lambda: bench_fault.run_rows(tiny=not args.full))
+    section("robust", lambda: bench_robust.run_rows(tiny=not args.full))
     section("roofline", roofline.run)
     if failures:
         sys.exit(1)

@@ -16,18 +16,30 @@ checks the safety net under every schedule: budget conservation, no
 non-finite value ever served, retired slots never allocated, and the
 recorded trace replaying bitwise through ``simulator.run_scan``.
 
-See EXPERIMENTS.md §Chaos drills for the catalogue and replay instructions.
+Adversarial *participants* ride the same channels: ``clients.ClientChaos``
+turns a seeded fraction of FL clients Byzantine (sign-flip / scaled /
+colluding / NaN / weight-inflating uploads, channel ``byz/<service>``)
+against the ``fl.aggregation`` robust-aggregator registry, and
+``bids.BidChaos`` plays seeded unilateral deviations against the auction's
+Prop. 5 truthfulness gap (channel ``bid``).  ``invariants`` gains the
+matching robustness gates (``accuracy_bounded`` / ``params_finite`` /
+``regret_bounded`` / ``assert_robust``).
+
+See EXPERIMENTS.md §Chaos drills and §Adversarial robustness for the
+catalogues and replay instructions.
 """
 from repro.chaos.schedule import ChaosSchedule
 from repro.chaos.injectors import (AdmissionChaos, CheckpointChaos,
                                    HeartbeatChaos, Injector, SolverChaos,
                                    poison_channel_state, poison_warm_seed)
+from repro.chaos.clients import AttackSpec, ClientChaos
+from repro.chaos.bids import BidChaos
 from repro.chaos.engine import ChaosEngine, default_injectors, run_storm
 from repro.chaos import invariants
 
 __all__ = [
     "ChaosSchedule", "Injector", "HeartbeatChaos", "SolverChaos",
     "CheckpointChaos", "AdmissionChaos", "poison_channel_state",
-    "poison_warm_seed", "ChaosEngine", "default_injectors", "run_storm",
-    "invariants",
+    "poison_warm_seed", "AttackSpec", "ClientChaos", "BidChaos",
+    "ChaosEngine", "default_injectors", "run_storm", "invariants",
 ]

@@ -1,0 +1,118 @@
+"""Adversarial-participant chaos: seeded Byzantine clients for the cotrain
+loop.
+
+PR 8's injectors attacked the *infrastructure* (heartbeats, solvers,
+checkpoints); ``ClientChaos`` attacks the *participants*: a seeded fraction
+of client slots per service turns Byzantine and manipulates what it uploads
+to the FedAvg server.  Membership draws ride the same
+``(ROOT_SALT, seed, period, crc32(channel))`` scheme as every other chaos
+channel (``schedule.ChaosSchedule``, channel ``byz/<service>``), so an
+attacked training trajectory replays bitwise from ``AttackSpec.seed`` alone
+-- and, because the channels are disjoint from the simulator's salted
+streams, the attack cannot perturb the allocation side of the episode.
+
+The catalogue (Fang et al. 2020 / Blanchard et al. 2017 standards):
+
+* ``sign_flip``      -- Byzantine deltas become ``-scale * delta`` (scaled
+                        gradient reversal; at 20% clients this drives the
+                        plain FedAvg mean *away* from the optimum).
+* ``scaled_delta``   -- deltas become ``scale * delta`` (model-boosting /
+                        divergence amplification).
+* ``same_value``     -- collusion: every Byzantine client uploads the
+                        identical constant-``scale`` vector, steering the
+                        mean toward a common crafted point.
+* ``nan``            -- a single NaN upload; poisons any unmasked reduction.
+* ``inflate_weight`` -- honest-looking delta, weight multiplied by
+                        ``scale`` (dominates an uncapped weighted mean;
+                        see ``server.sanitize_weights``).
+
+``AttackSpec`` is a frozen (hashable) dataclass, so it rides the cotrain
+jit statics: one trace per attack config, vmap/fleet-safe.  The actual
+per-round transformation ``attack_fn`` is pure jnp on a (C,) Byzantine mask
+the episode threads through its scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.chaos.schedule import ChaosSchedule
+
+ATTACKS = ("sign_flip", "scaled_delta", "same_value", "nan", "inflate_weight")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackSpec:
+    """Hashable (jit-static) description of an adversarial client cohort."""
+
+    attack: str = "sign_flip"
+    byz_frac: float = 0.2    # per-slot Bernoulli membership probability
+    scale: float = 8.0       # attack magnitude (see the catalogue above)
+    seed: int = 0            # ChaosSchedule storm seed for membership draws
+
+    def __post_init__(self):
+        if self.attack not in ATTACKS:
+            raise ValueError(
+                f"unknown client attack {self.attack!r}; known: {ATTACKS}")
+        if not 0.0 <= self.byz_frac <= 1.0:
+            raise ValueError(
+                f"byz_frac must be in [0, 1], got {self.byz_frac}")
+
+
+class ClientChaos:
+    """Deterministic Byzantine-membership planner for one attacked episode."""
+
+    name = "clients"
+
+    def __init__(self, spec: AttackSpec):
+        self.spec = spec
+        self.schedule = ChaosSchedule(spec.seed)
+
+    def plan(self, n_periods: int, n_services: int, k_max: int) -> np.ndarray:
+        """(T, N, K) bool Byzantine membership: per period and service, each
+        client slot flips Byzantine with prob ``byz_frac`` on the dedicated
+        ``byz/<service>`` channel -- independent of every other chaos
+        channel and replayable from the spec's seed."""
+        out = np.zeros((n_periods, n_services, k_max), dtype=bool)
+        for t in range(n_periods):
+            for s in range(n_services):
+                draws = self.schedule.rng(t, f"byz/{s}").random(k_max)
+                out[t, s] = draws < self.spec.byz_frac
+        return out
+
+
+def attack_fn(spec: AttackSpec):
+    """Pure jnp transformation ``(deltas, weights, byz) -> (deltas, weights)``
+    applied between the client vmap and the aggregator: ``byz`` is the (C,)
+    bool membership mask for this round.  Honest clients pass through
+    bitwise."""
+
+    def mask(byz, leaf):
+        return byz.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+    def apply(deltas, weights, byz):
+        s = spec.scale
+        if spec.attack == "sign_flip":
+            deltas = jax.tree.map(
+                lambda d: jnp.where(mask(byz, d), -s * d, d), deltas)
+        elif spec.attack == "scaled_delta":
+            deltas = jax.tree.map(
+                lambda d: jnp.where(mask(byz, d), s * d, d), deltas)
+        elif spec.attack == "same_value":
+            deltas = jax.tree.map(
+                lambda d: jnp.where(mask(byz, d),
+                                    jnp.full_like(d, s), d), deltas)
+        elif spec.attack == "nan":
+            deltas = jax.tree.map(
+                lambda d: jnp.where(mask(byz, d),
+                                    jnp.full_like(d, jnp.nan), d), deltas)
+        elif spec.attack == "inflate_weight":
+            weights = jnp.where(
+                jnp.logical_and(byz, weights > 0),
+                weights * jnp.asarray(s, weights.dtype), weights)
+        return deltas, weights
+
+    return apply

@@ -112,3 +112,60 @@ def assert_invariants(served, plane,
         raise AssertionError(
             f"chaos invariants violated: {bad}; report={report}")
     return report
+
+
+# ---------------------------------------------------------------------------
+# Robustness gates: what an *adversarial-participant* storm must preserve.
+# ---------------------------------------------------------------------------
+
+# Max final-accuracy drop a robust aggregator may concede to a byz_frac<=0.2
+# sign-flip/scaled-delta cohort on the bigram task (absolute, on [0, 1]).
+ROBUST_ACC_DROP = 0.15
+
+
+def accuracy_bounded(clean_acc: float, attacked_acc: float,
+                     max_drop: float = ROBUST_ACC_DROP) -> dict:
+    """Bounded breakdown: under f Byzantine clients a *robust* aggregator's
+    final accuracy must stay within ``max_drop`` of the clean run's."""
+    drop = float(clean_acc) - float(attacked_acc)
+    return {"ok": bool(np.isfinite(attacked_acc) and drop <= max_drop),
+            "clean_acc": float(clean_acc),
+            "attacked_acc": float(attacked_acc),
+            "drop": drop, "max_drop": float(max_drop)}
+
+
+def params_finite(params) -> dict:
+    """Unconditional: no aggregator run may ever serve non-finite model
+    parameters -- a NaN/Inf update must be masked, trimmed, or out-scored,
+    never averaged in."""
+    import jax
+
+    leaves = jax.tree.leaves(params)
+    bad = [i for i, leaf in enumerate(leaves)
+           if not bool(np.all(np.isfinite(np.asarray(leaf))))]
+    return {"ok": not bad, "nonfinite_leaves": bad[:5]}
+
+
+def regret_bounded(rows: list[dict], tol: float = 1e-3) -> dict:
+    """Prop. 5 gate: no audited bid deviation may gain more than the Eq. 31
+    truthfulness gap (``auction.delta_bound``) plus float tolerance."""
+    bad = [r for r in rows
+           if r["gain"] > r["delta_bound"] + tol
+           or not np.isfinite(r["gain"])]
+    worst = max((r["gain"] - r["delta_bound"] for r in rows), default=0.0)
+    return {"ok": not bad, "n_audited": len(rows),
+            "worst_excess": float(worst),
+            "violations": [{k: v for k, v in r.items()
+                            if k in ("trial", "provider", "deviation",
+                                     "factor", "gain", "delta_bound")}
+                           for r in bad[:5]]}
+
+
+def assert_robust(report: dict) -> dict:
+    """Raise on the first failed robustness gate (same shape contract as
+    ``assert_invariants``: a dict of ``{"ok": bool, ...}`` entries)."""
+    bad = [name for name, res in report.items() if not res["ok"]]
+    if bad:
+        raise AssertionError(
+            f"robustness gates violated: {bad}; report={report}")
+    return report

@@ -6,4 +6,4 @@ from repro.fl.service import (FLService, arch_service_tuple,  # noqa: F401
                               episode_services)
 from repro.fl.client import local_update  # noqa: F401
 from repro.fl.server import fedavg_round, make_fl_round_step  # noqa: F401
-from repro.fl import compression, cotrain, simulator  # noqa: F401
+from repro.fl import aggregation, compression, cotrain, simulator  # noqa: F401

@@ -1,0 +1,281 @@
+"""Byzantine-robust aggregation: a string-keyed registry over the FedAvg
+server, mirroring ``core.policy``'s AllocationPolicy registry.
+
+Every aggregator has the same pure signature
+
+    agg(deltas, weights) -> aggregated_delta
+
+with ``deltas`` a pytree whose leaves carry a leading client axis (C, ...)
+and ``weights`` (C,) where zero marks a dropped straggler.  All of them are
+
+* **mask-aware** -- a dropped client (weight 0) never contributes, not even
+  a non-finite delta (``where`` masks, never bare multiplies; the all-dropped
+  round returns an exactly-zero delta);
+* **jit-compatible and vmap/fleet-safe** -- static shapes only, the
+  participant count enters through comparisons and dynamic gathers, never
+  through shapes, so one trace serves every episode in a fleet sweep;
+* **attack-hardened** -- a *participating* client whose delta contains
+  NaN/Inf is treated as Byzantine and excluded before any reduction (the
+  robust aggregators; plain ``fedavg`` keeps the seed semantics where only
+  the weight mask protects you, which is exactly the breakage the robust
+  registry exists to fix).
+
+Registry entries:
+
+* ``fedavg``       -- ``fl.server.fedavg_round`` itself (the bitwise-pinned
+                      default path; cotrain goldens ride on it).
+* ``trimmed_mean`` -- coordinate-wise trimmed mean: per coordinate sort the
+                      participating values, drop the ``trim_frac`` tails,
+                      average the middle (Yin et al. 2018).
+* ``median``       -- coordinate-wise median over participants.
+* ``norm_clip``    -- FedAvg over per-client global-L2-clipped deltas; the
+                      clip radius is ``clip_norm`` or, when None, the median
+                      participant norm (parameter-free, scale-adaptive).
+* ``krum`` / ``multi_krum`` -- select the client(s) with the smallest sum of
+                      squared distances to their n-f-2 nearest neighbours
+                      (Blanchard et al. 2017); ``multi_krum`` averages the
+                      best n-f.
+
+Robust aggregators deliberately ignore weight *magnitudes* and use only the
+participation mask (w > 0): trusting client-reported weights is itself an
+attack surface (see ``ClientChaos``'s inflate_weight attack and the capped
+``fedavg_round``).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# Finite-but-huge pairwise distance for invalid pairs: keeps Krum scores
+# finite for every participant (an all-inf score row would let argmin land
+# on a non-participating slot).
+_FAR = 1e30
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_aggregator(
+    name: str,
+    *,
+    trim_frac: float = 0.1,
+    clip_norm: float | None = None,
+    byz_f: int = 1,
+    **unknown,
+) -> Callable:
+    """Build ``agg(deltas, weights)`` by registry name.
+
+    Options are per-family (unused ones are ignored by the factory, unknown
+    ones are rejected here, mirroring ``core.policy.get_policy``):
+    ``trim_frac`` (trimmed_mean), ``clip_norm`` (norm_clip; None = adaptive
+    median-norm), ``byz_f`` (krum/multi_krum's assumed Byzantine count).
+    """
+    if unknown:
+        raise ValueError(
+            f"unknown aggregator options {sorted(unknown)}; "
+            f"known: {sorted(KNOWN_OPTIONS)}")
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown aggregator {name!r}; available: {list(available())}")
+    return _REGISTRY[name](trim_frac=trim_frac, clip_norm=clip_norm,
+                           byz_f=byz_f)
+
+
+KNOWN_OPTIONS = frozenset(
+    p for p in inspect.signature(get_aggregator).parameters
+    if p not in ("name", "unknown"))
+
+
+# ---------------------------------------------------------------------------
+# Shared mask plumbing.
+# ---------------------------------------------------------------------------
+
+def participation(deltas, weights) -> jax.Array:
+    """(C,) bool: clients that both met the deadline (w > 0) and sent an
+    entirely finite delta.  The robust aggregators reduce only over this
+    set, so a NaN/Inf update is equivalent to the client having dropped."""
+    part = weights > 0
+    for leaf in jax.tree.leaves(deltas):
+        axes = tuple(range(1, leaf.ndim))
+        part = jnp.logical_and(part, jnp.all(jnp.isfinite(leaf), axis=axes))
+    return part
+
+
+def _bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def _masked_sorted(leaf: jax.Array, part: jax.Array) -> jax.Array:
+    """Sort along the client axis with non-participants pushed to the top
+    (+inf), so positions 0..m-1 hold exactly the participating values."""
+    vals = jnp.where(_bcast(part, leaf), leaf, jnp.inf)
+    return jnp.sort(vals, axis=0)
+
+
+def _flatten_clients(deltas) -> jax.Array:
+    """(C, D) float32 matrix of per-client flattened deltas."""
+    leaves = jax.tree.leaves(deltas)
+    c = leaves[0].shape[0]
+    return jnp.concatenate(
+        [leaf.reshape(c, -1).astype(jnp.float32) for leaf in leaves], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Implementations.
+# ---------------------------------------------------------------------------
+
+@register("fedavg")
+def _fedavg(**_opts):
+    from repro.fl import server as fl_server  # circular at module load
+    return fl_server.fedavg_round
+
+
+@register("trimmed_mean")
+def _trimmed_mean(*, trim_frac: float, **_opts):
+    if not 0.0 <= trim_frac < 0.5:
+        raise ValueError(f"trim_frac must be in [0, 0.5), got {trim_frac}")
+
+    def agg(deltas, weights):
+        part = participation(deltas, weights)
+        m = jnp.sum(part.astype(jnp.int32))
+        t = jnp.floor(trim_frac * m).astype(jnp.int32)
+
+        def one(leaf):
+            srt = _masked_sorted(leaf, part)
+            pos = _bcast(jnp.arange(leaf.shape[0], dtype=jnp.int32), leaf)
+            keep = jnp.logical_and(pos >= t, pos < m - t)
+            num = jnp.sum(jnp.where(keep, srt, jnp.zeros_like(srt)), axis=0)
+            cnt = jnp.maximum(m - 2 * t, 1).astype(leaf.dtype)
+            return jnp.where(m > 0, num / cnt, jnp.zeros_like(num))
+
+        return jax.tree.map(one, deltas)
+
+    return agg
+
+
+@register("median")
+def _median(**_opts):
+    def agg(deltas, weights):
+        part = participation(deltas, weights)
+        m = jnp.sum(part.astype(jnp.int32))
+        lo_i = jnp.maximum((m - 1) // 2, 0)
+        hi_i = jnp.maximum(m // 2, 0)
+
+        def one(leaf):
+            srt = _masked_sorted(leaf, part)
+            med = 0.5 * (jnp.take(srt, lo_i, axis=0)
+                         + jnp.take(srt, hi_i, axis=0))
+            return jnp.where(m > 0, med.astype(leaf.dtype),
+                             jnp.zeros_like(med, leaf.dtype))
+
+        return jax.tree.map(one, deltas)
+
+    return agg
+
+
+@register("norm_clip")
+def _norm_clip(*, clip_norm: float | None, **_opts):
+    if clip_norm is not None and not clip_norm > 0:
+        raise ValueError(f"clip_norm must be positive or None, got {clip_norm}")
+    from repro.fl import server as fl_server
+
+    def agg(deltas, weights):
+        part = participation(deltas, weights)
+        flat = _flatten_clients(deltas)
+        sq = jnp.sum(jnp.where(part[:, None], flat, 0.0) ** 2, axis=1)
+        norms = jnp.sqrt(sq)                                       # (C,)
+        if clip_norm is None:
+            # Adaptive radius: median participant norm (itself robust).
+            m = jnp.sum(part.astype(jnp.int32))
+            srt = jnp.sort(jnp.where(part, norms, jnp.inf))
+            radius = 0.5 * (srt[jnp.maximum((m - 1) // 2, 0)]
+                            + srt[jnp.maximum(m // 2, 0)])
+            radius = jnp.where(m > 0, radius, 0.0)
+        else:
+            radius = jnp.asarray(clip_norm, norms.dtype)
+        factor = jnp.minimum(1.0, radius / jnp.maximum(norms, 1e-30))
+        clipped = jax.tree.map(
+            lambda leaf: leaf * _bcast(factor, leaf).astype(leaf.dtype),
+            deltas)
+        return fl_server.fedavg_round(
+            clipped, jnp.where(part, weights, jnp.zeros_like(weights)))
+
+    return agg
+
+
+def _krum_scores(deltas, weights):
+    """(part, scores): Krum score per client = sum of squared distances to
+    its m - byz_f - 2 nearest participating neighbours.  Non-participants
+    score +inf; invalid pairs contribute the finite ``_FAR`` so a lone
+    participant still wins the argmin."""
+    part = participation(deltas, weights)
+    flat = jnp.where(part[:, None], _flatten_clients(deltas), 0.0)
+    c = flat.shape[0]
+    sq = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+    valid = jnp.logical_and(part[:, None], part[None, :])
+    valid = jnp.logical_and(valid, ~jnp.eye(c, dtype=bool))
+    d2 = jnp.where(valid, sq, _FAR)
+    return part, d2
+
+
+def _make_krum(byz_f: int, multi: bool):
+    if byz_f < 0:
+        raise ValueError(f"byz_f must be >= 0, got {byz_f}")
+
+    def agg(deltas, weights):
+        part, d2 = _krum_scores(deltas, weights)
+        c = d2.shape[0]
+        m = jnp.sum(part.astype(jnp.int32))
+        k = jnp.clip(m - byz_f - 2, 1, jnp.maximum(m - 1, 1))
+        srt = jnp.sort(d2, axis=1)
+        pos = jnp.arange(c, dtype=jnp.int32)[None, :]
+        scores = jnp.sum(jnp.where(pos < k, srt, 0.0), axis=1)
+        scores = jnp.where(part, scores, jnp.inf)
+        if multi:
+            n_sel = jnp.clip(m - byz_f, 1, c)
+            rank = jnp.argsort(jnp.argsort(scores))
+            sel = jnp.logical_and(rank < n_sel, part)
+            n_sel = jnp.maximum(jnp.sum(sel.astype(jnp.int32)), 1)
+
+            def one(leaf):
+                num = jnp.sum(
+                    jnp.where(_bcast(sel, leaf), leaf, jnp.zeros_like(leaf)),
+                    axis=0)
+                out = num / n_sel.astype(leaf.dtype)
+                return jnp.where(m > 0, out, jnp.zeros_like(out))
+        else:
+            winner = jnp.argmin(scores)
+
+            def one(leaf):
+                out = jnp.take(leaf, winner, axis=0)
+                # the winner is a participant, hence finite, but keep the
+                # empty-round identity exact
+                return jnp.where(m > 0, out, jnp.zeros_like(out))
+
+        return jax.tree.map(one, deltas)
+
+    return agg
+
+
+@register("krum")
+def _krum(*, byz_f: int, **_opts):
+    return _make_krum(byz_f, multi=False)
+
+
+@register("multi_krum")
+def _multi_krum(*, byz_f: int, **_opts):
+    return _make_krum(byz_f, multi=True)

@@ -19,7 +19,14 @@ import jax.numpy as jnp
 
 def topk_sparsify(delta, k_frac: float, residual=None):
     """Keep the top k_frac fraction (by magnitude) of each leaf.
-    Returns (sparse_delta, new_residual)."""
+    Returns (sparse_delta, new_residual).
+
+    Selection is by ``top_k`` *indices* + scatter, so exactly k entries are
+    transmitted per leaf: a threshold compare (``|x| >= thresh``) would keep
+    every tied entry -- and, on an all-zero leaf (thresh 0), the whole leaf
+    -- making ``compression_ratio`` under-report the actual upload.  Ties
+    resolve to ``top_k``'s deterministic lowest-index winners.
+    """
     if residual is not None:
         delta = jax.tree.map(lambda d, r: d + r.astype(d.dtype), delta, residual)
 
@@ -27,8 +34,8 @@ def topk_sparsify(delta, k_frac: float, residual=None):
         n = x.size
         k = max(1, int(n * k_frac))
         flat = x.reshape(-1)
-        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
-        kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
         return kept.reshape(x.shape)
 
     sparse = jax.tree.map(one, delta)

@@ -117,6 +117,11 @@ class TrainSpec:
     rounds_cap: int = 4
     data_seed: int = 0
     data_temperature: float = 0.3
+    aggregator: str = "fedavg"        # fl.aggregation registry key
+    trim_frac: float = 0.1            # trimmed_mean tail fraction per side
+    clip_norm: float | None = None    # norm_clip radius (None = median norm)
+    byz_f: int = 1                    # krum/multi_krum assumed Byzantine count
+    weight_cap: float | None = None   # server.sanitize_weights clip
 
     def __post_init__(self):
         if self.rounds_cap < 1:
@@ -127,6 +132,11 @@ class TrainSpec:
         if not self.deadline_x > 0:
             raise ValueError(
                 f"deadline_x must be positive, got {self.deadline_x}")
+        from repro.fl import aggregation
+        if self.aggregator not in aggregation.available():
+            raise ValueError(
+                f"unknown aggregator {self.aggregator!r}; "
+                f"available: {list(aggregation.available())}")
 
 
 class _Task:
@@ -168,7 +178,17 @@ def _stacked_batches(data: SyntheticLM, spec: TrainSpec, svc_id, round_idx,
     return jax.vmap(one_client)(jnp.arange(k_max, dtype=jnp.int32))
 
 
-def _bigram_task(spec: TrainSpec, k_max: int) -> _Task:
+def _round_step_kwargs(spec: TrainSpec, attack) -> dict:
+    return dict(
+        local_steps=spec.local_steps, client_lr=spec.client_lr,
+        server_lr=spec.server_lr, prox_mu=spec.prox_mu,
+        compression=spec.compression, topk_frac=spec.topk_frac,
+        aggregator=spec.aggregator, trim_frac=spec.trim_frac,
+        clip_norm=spec.clip_norm, byz_f=spec.byz_f,
+        weight_cap=spec.weight_cap, attack=attack)
+
+
+def _bigram_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
     data = SyntheticLM(vocab_size=spec.vocab, seq_len=spec.seq_len,
                        seed=spec.data_seed, temperature=spec.data_temperature)
 
@@ -184,9 +204,7 @@ def _bigram_task(spec: TrainSpec, k_max: int) -> _Task:
             key, (spec.vocab, spec.vocab), jnp.float32)
 
     round_step = fl_server.make_fl_round_step(
-        loss_fn, local_steps=spec.local_steps, client_lr=spec.client_lr,
-        server_lr=spec.server_lr, prox_mu=spec.prox_mu,
-        compression=spec.compression, topk_frac=spec.topk_frac)
+        loss_fn, **_round_step_kwargs(spec, attack))
 
     def batch_fn(svc_id, round_idx):
         return _stacked_batches(data, spec, svc_id, round_idx, k_max)
@@ -199,7 +217,7 @@ def _bigram_task(spec: TrainSpec, k_max: int) -> _Task:
     return _Task(init, round_step, batch_fn, eval_fn)
 
 
-def _zoo_task(spec: TrainSpec, k_max: int) -> _Task:
+def _zoo_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
     from repro import configs
 
     cfg = configs.get_smoke_config(spec.arch)
@@ -212,9 +230,7 @@ def _zoo_task(spec: TrainSpec, k_max: int) -> _Task:
                        seed=spec.data_seed, temperature=spec.data_temperature)
 
     round_step = fl_server.make_fl_round_step(
-        model.loss, local_steps=spec.local_steps, client_lr=spec.client_lr,
-        server_lr=spec.server_lr, prox_mu=spec.prox_mu,
-        compression=spec.compression, topk_frac=spec.topk_frac)
+        model.loss, **_round_step_kwargs(spec, attack))
 
     def batch_fn(svc_id, round_idx):
         return _stacked_batches(data, spec, svc_id, round_idx, k_max)
@@ -228,11 +244,11 @@ def _zoo_task(spec: TrainSpec, k_max: int) -> _Task:
     return _Task(model.init, round_step, batch_fn, eval_fn)
 
 
-def _build_task(spec: TrainSpec, k_max: int) -> _Task:
+def _build_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
     if spec.task == "bigram":
-        return _bigram_task(spec, k_max)
+        return _bigram_task(spec, k_max, attack)
     if spec.task == "zoo":
-        return _zoo_task(spec, k_max)
+        return _zoo_task(spec, k_max, attack)
     raise ValueError(
         f"unknown train task {spec.task!r}; expected 'bigram' or 'zoo'")
 
@@ -241,11 +257,11 @@ def _build_task(spec: TrainSpec, k_max: int) -> _Task:
 # The co-trained episode: one lax.scan, allocation step traced once.
 # ---------------------------------------------------------------------------
 
-_COTRAIN_STATICS = simulator._EPISODE_STATICS + ("train",)
+_COTRAIN_STATICS = simulator._EPISODE_STATICS + ("train", "attack")
 
 
-def _cotrain_episode_impl(arrivals, counts, key, *, train, policy, net,
-                          n_total, k_max, rounds_required, max_periods,
+def _cotrain_episode_impl(arrivals, counts, key, *, train, attack, policy,
+                          net, n_total, k_max, rounds_required, max_periods,
                           n_bids, alpha_fair, intra_backend, warm_start,
                           collect_history, collect_alloc, channel, churn):
     # -- identical construction to simulator._episode_impl: the allocation
@@ -258,22 +274,35 @@ def _cotrain_episode_impl(arrivals, counts, key, *, train, policy, net,
     churn_proc = scenarios.get_churn(churn, net)
 
     # -- the training side: task closures + the allocated-latency model.
-    task = _build_task(train, k_max)
+    task = _build_task(train, k_max, attack)
     split_fn = policy_mod.client_split_fn(intra_backend)
     time_fn = policy_mod.round_time_fn(intra_backend)
     svc_ids = jnp.arange(n_total, dtype=jnp.int32)
     k_init = jax.random.fold_in(key, COTRAIN_SALT)
     params0 = jax.vmap(lambda i: task.init(jax.random.fold_in(k_init, i)))(
         svc_ids)
+    if attack is not None:
+        # Host-side (trace-time) Byzantine plan on the chaos channels: a
+        # deterministic function of the static AttackSpec, so the compiled
+        # episode replays the attack bitwise and the fleet cache stays
+        # consistent.  Shared across seeds by design (the attacker does not
+        # re-roll per episode).
+        from repro.chaos import clients as chaos_clients
+        byz_plan = jnp.asarray(chaos_clients.ClientChaos(attack).plan(
+            max_periods, n_total, k_max))
 
-    def train_service(svc_id, params, first_round, n_rounds, weights):
+    def train_service(svc_id, params, first_round, n_rounds, weights,
+                      byz=None):
         """Advance one service ``n_rounds`` FedAvg rounds (static bound
         ``rounds_cap``; skipped rounds are identity on params)."""
 
         def body(p, r):
             do = r < n_rounds
             batches = task.batch_fn(svc_id, first_round + r)
-            new_p, metrics = task.round_step(p, batches, weights)
+            if attack is None:
+                new_p, metrics = task.round_step(p, batches, weights)
+            else:
+                new_p, metrics = task.round_step(p, batches, weights, byz)
             p = jax.tree.map(
                 lambda a, b: jnp.where(do, a, b), new_p, p)
             return p, jnp.where(do, metrics["loss"], 0.0)
@@ -284,6 +313,8 @@ def _cotrain_episode_impl(arrivals, counts, key, *, train, policy, net,
         return params, mean_loss
 
     def step(carry, period):
+        if attack is not None:
+            period, byz_p = period
         (rounds_done, duration, chan_state, churn_state, pol_state,
          params, trained, clipped) = carry
         prev_rounds = rounds_done
@@ -314,8 +345,12 @@ def _cotrain_episode_impl(arrivals, counts, key, *, train, policy, net,
             svc.mask, jnp.where(svc.mask, lat, jnp.inf)
             <= train.deadline_x * t_round[:, None])
         weights = admitted.astype(jnp.float32)
-        params, train_loss = jax.vmap(train_service)(
-            svc_ids, params, trained, n_train, weights)
+        if attack is None:
+            params, train_loss = jax.vmap(train_service)(
+                svc_ids, params, trained, n_train, weights)
+        else:
+            params, train_loss = jax.vmap(train_service)(
+                svc_ids, params, trained, n_train, weights, byz_p)
         trained = trained + n_train
         ev_loss, ev_acc = jax.vmap(task.eval_fn)(params, svc_ids)
         out = {
@@ -339,8 +374,10 @@ def _cotrain_episode_impl(arrivals, counts, key, *, train, policy, net,
             churn_proc.init(key, n_total, k_max),
             pol.init_state(n_total), params0,
             jnp.zeros((n_total,), jnp.int32), jnp.int32(0))
+    periods = jnp.arange(max_periods, dtype=jnp.int32)
+    xs = periods if attack is None else (periods, byz_plan)
     (rounds_done, duration, _, _, _, params, trained, clipped), hist = (
-        jax.lax.scan(step, init, jnp.arange(max_periods, dtype=jnp.int32)))
+        jax.lax.scan(step, init, xs))
     return rounds_done, duration, trained, clipped, params, hist
 
 
@@ -379,8 +416,8 @@ _CURVE_KEYS = ("loss", "acc", "train_loss", "b", "f", "active", "rounds",
 
 
 def _statics(cfg: simulator.SimConfig, train: TrainSpec,
-             net: network.NetworkConfig) -> dict:
-    return dict(train=train,
+             net: network.NetworkConfig, attack=None) -> dict:
+    return dict(train=train, attack=attack,
                 **simulator._episode_statics(cfg, net, simulator._k_cap(cfg)))
 
 
@@ -410,7 +447,8 @@ def _summarize_episode(cfg: simulator.SimConfig,
 
 
 def run_cotrain_scan(cfg: simulator.SimConfig, train: TrainSpec | None = None,
-                     net: network.NetworkConfig | None = None) -> dict:
+                     net: network.NetworkConfig | None = None, *,
+                     attack=None) -> dict:
     """Co-train one episode (one compiled ``lax.scan``).
 
     Returns the ``run_scan`` summary keys (durations bitwise identical to
@@ -419,13 +457,18 @@ def run_cotrain_scan(cfg: simulator.SimConfig, train: TrainSpec | None = None,
     bandwidth), the ``time_s`` wall-clock axis, per-service
     ``trained_rounds`` / ``clipped_rounds`` totals, the final stacked model
     ``params``, and ``services`` -- the episode's ``FLService`` bookkeeping.
+
+    ``attack`` (a ``chaos.clients.AttackSpec``) turns a seeded fraction of
+    client slots Byzantine; the allocation stream is untouched (the attack
+    only perturbs uploaded deltas/weights), so durations stay bitwise equal
+    to ``run_scan`` even under attack.
     """
     train = train or TrainSpec()
     net = net or simulator._default_net(cfg)
     arrivals, counts = simulator._static_draws(cfg, net)
     rounds_done, duration, trained, clipped, params, hist = _cotrain_episode(
         jnp.asarray(arrivals, jnp.int32), jnp.asarray(counts, jnp.int32),
-        jax.random.key(cfg.seed + 7), **_statics(cfg, train, net),
+        jax.random.key(cfg.seed + 7), **_statics(cfg, train, net, attack),
     )
     return _summarize_episode(cfg, net, arrivals, counts, rounds_done,
                               duration, trained, clipped, params, hist)
@@ -462,7 +505,8 @@ def _summarize_batch(cfg: simulator.SimConfig, net: network.NetworkConfig,
 
 def run_cotrain_batch(cfg: simulator.SimConfig,
                       train: TrainSpec | None = None, seeds=(0,),
-                      net: network.NetworkConfig | None = None) -> dict:
+                      net: network.NetworkConfig | None = None, *,
+                      attack=None) -> dict:
     """Co-trained scenario sweep: the compiled episode vmapped over seeds.
 
     Same batching contract as ``simulator.run_batch``: every episode is
@@ -479,14 +523,15 @@ def run_cotrain_batch(cfg: simulator.SimConfig,
     arrivals, counts = simulator._draws(
         keys, **simulator._draw_statics(cfg, net))
     out = _cotrain_episode_batch(arrivals, counts, keys,
-                                 **_statics(cfg, train, net))
+                                 **_statics(cfg, train, net, attack))
     return _summarize_batch(cfg, net, seeds, arrivals, counts, *out)
 
 
 def run_cotrain_fleet(cfg: simulator.SimConfig,
                       train: TrainSpec | None = None, seeds=(0,),
                       net: network.NetworkConfig | None = None, *,
-                      mesh=None, chunk_size: int | None = None) -> dict:
+                      mesh=None, chunk_size: int | None = None,
+                      attack=None) -> dict:
     """Device-sharded, memory-bounded co-training sweep (Monte-Carlo
     accuracy bands): ``simulator.run_fleet`` geometry -- one-axis mesh over
     the seed axis, fixed-size chunks per device -- around the co-trained
@@ -503,7 +548,7 @@ def run_cotrain_fleet(cfg: simulator.SimConfig,
     # Host copies before the call: the compiled sweep donates these buffers.
     arrivals_host = np.asarray(arrivals)[:len(seeds)]
     counts_host = np.asarray(counts)[:len(seeds)]
-    statics = _statics(cfg, train, net)
+    statics = _statics(cfg, train, net, attack)
     fn = _cotrain_fleet_fn(mesh, axis, n_chunks, chunk,
                            tuple(statics.items()))
     out = jax.tree_util.tree_map(

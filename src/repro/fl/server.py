@@ -25,7 +25,22 @@ from repro.fl import client as fl_client
 from repro.fl import compression as fl_comp
 
 
-def fedavg_round(deltas, weights):
+def sanitize_weights(weights, weight_cap: float | None = None):
+    """Defend the masked mean against weight manipulation.  Returns
+    ``(clean_weights, n_nonfinite)``: non-finite client weights are zeroed
+    (a NaN weight would poison the denominator for *everyone*) and counted
+    -- never absorbed silently -- and, when ``weight_cap`` is set, each
+    weight is clipped to it so no single client can dominate the average by
+    inflating its report.  Finite, in-cap weights pass through bitwise."""
+    finite = jnp.isfinite(weights)
+    n_bad = jnp.sum((~finite).astype(jnp.int32))
+    clean = jnp.where(finite, weights, jnp.zeros_like(weights))
+    if weight_cap is not None:
+        clean = jnp.minimum(clean, jnp.asarray(weight_cap, clean.dtype))
+    return clean, n_bad
+
+
+def fedavg_round(deltas, weights, weight_cap: float | None = None):
     """Weighted average of per-client deltas.  deltas: pytree with leading
     client axis (C, ...); weights: (C,) (zero = dropped straggler).
 
@@ -34,8 +49,12 @@ def fedavg_round(deltas, weights):
     non-finite one from a diverged run.  The all-straggler round returns an
     exactly-zero delta (params unchanged) instead of leaning on the 1e-12
     denominator clamp; when any weight is positive the arithmetic is
-    unchanged from the plain weighted mean.
+    unchanged from the plain weighted mean.  Weights themselves pass through
+    ``sanitize_weights`` (non-finite -> dropped, optional ``weight_cap``
+    clip), so a manipulated weight vector degrades to a masked mean instead
+    of a poisoned one.
     """
+    weights, _ = sanitize_weights(weights, weight_cap)
     wsum = jnp.sum(weights)
     denom = jnp.maximum(wsum, 1e-12)
 
@@ -57,10 +76,40 @@ def make_fl_round_step(
     prox_mu: float = 0.0,
     compression: str = "none",
     topk_frac: float = 0.01,
+    aggregator: str = "fedavg",
+    trim_frac: float = 0.1,
+    clip_norm: float | None = None,
+    byz_f: int = 1,
+    weight_cap: float | None = None,
+    attack=None,
 ):
     """Returns round(params, client_batches, client_weights) ->
     (params, metrics).  client_batches leaves: (C, E, ...) -- C clients, E
-    local steps each."""
+    local steps each.
+
+    ``aggregator`` selects the reduction from ``fl.aggregation``'s registry
+    (``"fedavg"`` keeps the exact seed path; the robust entries take
+    ``trim_frac`` / ``clip_norm`` / ``byz_f``).  ``weight_cap`` bounds
+    client-reported weights (``sanitize_weights``; applies to the loss
+    average and the fedavg denominator alike).  ``attack`` is an optional
+    ``chaos.clients.AttackSpec``: when set, the returned step takes a fourth
+    argument ``byz`` -- a (C,) bool mask of Byzantine clients -- and applies
+    the attack to their deltas/weights *before* aggregation, modelling
+    adversarial participants the server never observes directly.
+    """
+    from repro.fl import aggregation as fl_agg
+
+    if aggregator == "fedavg":
+        # The pinned default path: identical call to the seed fedavg_round.
+        def agg_fn(deltas, weights):
+            return fedavg_round(deltas, weights, weight_cap)
+    else:
+        agg_fn = fl_agg.get_aggregator(
+            aggregator, trim_frac=trim_frac, clip_norm=clip_norm, byz_f=byz_f)
+
+    if attack is not None:
+        from repro.chaos import clients as chaos_clients
+        attack_fn = chaos_clients.attack_fn(attack)
 
     def one_client(params, batches):
         delta, loss = fl_client.local_update(
@@ -75,9 +124,16 @@ def make_fl_round_step(
             delta, _ = fl_comp.int8_quantize(delta)
         return delta, loss
 
-    def round_step(params, client_batches, client_weights):
+    def round_step(params, client_batches, client_weights, byz=None):
         deltas, losses = jax.vmap(one_client, in_axes=(None, 0))(params, client_batches)
-        agg = fedavg_round(deltas, client_weights)
+        if attack is not None:
+            deltas, client_weights = attack_fn(deltas, client_weights, byz)
+        if weight_cap is not None or attack is not None:
+            client_weights, n_bad_w = sanitize_weights(
+                client_weights, weight_cap)
+        else:
+            n_bad_w = jnp.int32(0)
+        agg = agg_fn(deltas, client_weights)
         new_params = jax.tree.map(
             lambda p, d: (p + server_lr * d.astype(p.dtype)), params, agg
         )
@@ -87,7 +143,8 @@ def make_fl_round_step(
         # all-straggler round: no participants -> report loss 0, not 0/clamp
         mean_loss = jnp.where(wsum > 0, num / jnp.maximum(wsum, 1e-12), 0.0)
         return new_params, {"loss": mean_loss,
-                            "participating": jnp.sum(client_weights > 0)}
+                            "participating": jnp.sum(client_weights > 0),
+                            "nonfinite_weights": n_bad_w}
 
     return round_step
 

@@ -22,6 +22,7 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     ("BENCH_cotrain.json", "paper_figs_cotrain"),
     ("BENCH_serve.json", "bench_serve"),
     ("BENCH_fault.json", "bench_fault"),
+    ("BENCH_robust.json", "bench_robust"),
 ])
 def test_committed_bench_artifacts_validate(artifact, validator_module):
     """The repo-root bench trajectory must stay machine-reconstructable:

@@ -1,7 +1,9 @@
 """Fault-tolerance contracts: resume-loss bounds of ``resumable_loop``,
-elastic remesh planning at awkward device counts, and the repo-wide
+elastic remesh planning at awkward device counts, the repo-wide
 mutable-default-argument audit that the ``fault.resumable_loop`` fix
-(``policy=RestartPolicy()`` evaluated once at def time) motivated."""
+(``policy=RestartPolicy()`` evaluated once at def time) motivated, and the
+aggregation-registry mask audit (every registered aggregator -- present and
+future -- must ``where``-mask its client-axis reductions)."""
 import dataclasses
 import importlib
 import inspect
@@ -173,3 +175,64 @@ def test_no_mutable_defaults_under_src_repro():
                 offenders.append(f"{fn.__module__}.{fn.__qualname__}({name})")
     assert scanned > 100, "audit walked suspiciously few callables"
     assert not offenders, f"mutable defaults found: {offenders}"
+
+
+# -- registry-wide aggregator mask audit -------------------------------------
+
+def test_every_registered_aggregator_masks_the_client_axis():
+    """Behavioral audit over the WHOLE aggregation registry (including
+    entries future PRs add): any aggregator that reduces over the client
+    axis without a ``where`` mask -- a bare ``sum(w * d)``, an unmasked
+    ``sort``/``median`` -- is flagged here, because NaN garbage from
+    weight-0 clients would leak through the reduction.  Three probes per
+    entry, several client counts each: (1) poisoning every dropped client
+    with NaN must not move the output bitwise, (2) the output must stay
+    finite, (3) the all-dropped round must aggregate to exactly zero."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fl import aggregation
+
+    offenders = []
+    for name in aggregation.available():
+        agg = aggregation.get_aggregator(name)
+        for n_clients, seed in ((3, 0), (6, 1), (11, 2)):
+            rng = np.random.default_rng(seed)
+            deltas = {
+                "w": jnp.asarray(
+                    rng.normal(size=(n_clients, 4)).astype(np.float32)),
+                "b": jnp.asarray(
+                    rng.normal(size=(n_clients, 2, 3)).astype(np.float32)),
+            }
+            weights = jnp.asarray(
+                (rng.uniform(size=n_clients) > 0.4).astype(np.float32))
+            dropped = np.asarray(weights) == 0.0
+            if not dropped.any():
+                weights = weights.at[0].set(0.0)
+                dropped = np.asarray(weights) == 0.0
+            poison = jax.tree.map(
+                lambda d: jnp.where(
+                    jnp.asarray(dropped).reshape(
+                        (-1,) + (1,) * (d.ndim - 1)),
+                    jnp.float32(np.nan), d),
+                deltas)
+            base, poisoned = agg(deltas, weights), agg(poison, weights)
+            for k in base:
+                if not np.array_equal(np.asarray(base[k]),
+                                      np.asarray(poisoned[k])):
+                    offenders.append(
+                        f"{name}: dropped-client NaN moved leaf {k!r} "
+                        f"(C={n_clients})")
+                if not np.all(np.isfinite(np.asarray(poisoned[k]))):
+                    offenders.append(
+                        f"{name}: non-finite output leaf {k!r} "
+                        f"(C={n_clients})")
+            empty = agg(deltas, jnp.zeros((n_clients,)))
+            for k in empty:
+                if np.any(np.asarray(empty[k]) != 0.0):
+                    offenders.append(
+                        f"{name}: all-dropped round not exactly zero "
+                        f"({k!r}, C={n_clients})")
+    assert not offenders, (
+        "aggregators reducing over the client axis without a mask:\n  "
+        + "\n  ".join(offenders))

@@ -17,7 +17,7 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the hypothesis package")
 import hypothesis.strategies as st  # noqa: E402
 
-from repro.fl import server  # noqa: E402
+from repro.fl import compression, server  # noqa: E402
 
 
 def _deltas(rng, n_clients: int):
@@ -106,6 +106,68 @@ def test_all_straggler_round_is_identity_on_params(seed, n_clients):
                                   np.asarray(params["w"]))
     assert float(metrics["loss"]) == 0.0
     assert int(metrics["participating"]) == 0
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), n_rounds=st.integers(1, 12),
+       k_frac=st.floats(0.05, 0.9))
+def test_error_feedback_telescopes_exactly(seed, n_rounds, k_frac):
+    """Error feedback is lossless in aggregate: over any horizon the sum of
+    transmitted sparse updates plus the final residual equals the sum of the
+    raw per-round deltas (the residual carries exactly what was withheld,
+    never invents or drops mass)."""
+    rng = np.random.default_rng(seed)
+    deltas = [
+        {"w": jnp.asarray(rng.normal(size=(17,)).astype(np.float32))}
+        for _ in range(n_rounds)
+    ]
+    residual = None
+    sent = jnp.zeros((17,))
+    for d in deltas:
+        sparse, residual = compression.topk_sparsify(d, k_frac, residual)
+        sent = sent + sparse["w"]
+    raw = sum(np.asarray(d["w"], np.float64) for d in deltas)
+    np.testing.assert_allclose(
+        np.asarray(sent, np.float64) + np.asarray(residual["w"], np.float64),
+        raw, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_residual_dtype_preserved(seed):
+    """The client-held residual must keep each leaf's dtype round over round
+    (a silent fp32 upcast of a bf16 leaf would double client memory and
+    change the re-injected values)."""
+    rng = np.random.default_rng(seed)
+    delta = {
+        "hi": jnp.asarray(rng.normal(size=(12,)).astype(np.float32)),
+        "lo": jnp.asarray(rng.normal(size=(12,)),
+                          dtype=jnp.bfloat16),
+    }
+    for fn in (lambda d, r: compression.topk_sparsify(d, 0.25, r),
+               compression.int8_quantize):
+        residual = None
+        for _ in range(3):
+            out, residual = fn(delta, residual)
+            assert residual["hi"].dtype == jnp.float32
+            assert residual["lo"].dtype == jnp.bfloat16
+            assert out["lo"].dtype == jnp.bfloat16
+
+
+@hypothesis.settings(deadline=None, max_examples=30)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), size=st.integers(1, 200),
+       spread=st.floats(1e-3, 1e3))
+def test_int8_roundtrip_error_at_most_half_scale(seed, size, spread):
+    """Symmetric int8 quantization: every element's round-trip error is at
+    most scale/2 (round-to-nearest onto a 1/127-of-max grid), for any leaf
+    magnitude."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((spread * rng.normal(size=(size,))).astype(np.float32))
+    deq, res = compression.int8_quantize({"w": x})
+    scale = max(float(jnp.max(jnp.abs(x))), 1e-12) / 127.0
+    assert float(jnp.max(jnp.abs(res["w"]))) <= scale * 0.5 + 1e-6 * scale
+    np.testing.assert_allclose(np.asarray(deq["w"] + res["w"]), np.asarray(x),
+                               rtol=1e-6, atol=1e-7)
 
 
 def test_weighted_mean_matches_manual_reference():

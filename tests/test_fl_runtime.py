@@ -101,6 +101,35 @@ def test_compression_error_feedback_converges():
     assert max_res < 12 * float(jnp.max(jnp.abs(delta["w"])))
 
 
+def test_topk_keeps_exactly_k_on_ties():
+    """Regression for the |x| >= thresh selection: a leaf of tied
+    magnitudes must transmit exactly k entries, not every tied one (the
+    threshold form kept all of them and made compression_ratio a lie)."""
+    delta = {"w": jnp.ones((8,))}
+    sparse, residual = compression.topk_sparsify(delta, 0.25)
+    assert int(jnp.count_nonzero(sparse["w"])) == 2
+    # what wasn't sent is carried by the residual, exactly
+    np.testing.assert_array_equal(np.asarray(sparse["w"] + residual["w"]),
+                                  np.asarray(delta["w"]))
+    # mixed leaf: ties below the cut resolve to exactly k winners too
+    delta = {"w": jnp.asarray([3.0, -1.0, 1.0, 1.0])}
+    sparse, _ = compression.topk_sparsify(delta, 0.5)
+    kept = np.flatnonzero(np.asarray(sparse["w"]))
+    assert len(kept) == 2 and 0 in kept
+
+
+def test_topk_all_zero_leaf_stays_sparse():
+    """Regression for thresh == 0 on an all-zero leaf: |x| >= 0 selected the
+    ENTIRE leaf (n transmitted entries billed as k).  The index+scatter form
+    keeps the k-entry budget and a zero residual."""
+    delta = {"w": jnp.zeros((16,)), "b": jnp.asarray([0.0, 2.0, 0.0, 0.0])}
+    sparse, residual = compression.topk_sparsify(delta, 0.25)
+    np.testing.assert_array_equal(np.asarray(sparse["w"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(residual["w"]), 0.0)
+    # the non-zero leaf still transmits its top entry
+    np.testing.assert_array_equal(np.asarray(sparse["b"]), [0.0, 2.0, 0.0, 0.0])
+
+
 def test_compression_ratio_feeds_allocator():
     """Compressed uplink shrinks alpha and strictly increases f* at fixed b."""
     cfg = configs.get_smoke_config("gemma-2b")

@@ -1,0 +1,383 @@
+"""Byzantine-robust aggregation + adversarial-participant chaos.
+
+Pins the robustness contract of ``fl.aggregation`` and ``chaos.clients`` /
+``chaos.bids``:
+
+* **Registry.**  The aggregator catalogue is string-keyed like
+  ``core.policy``: unknown names and unknown options raise, ``TrainSpec``
+  validates its ``aggregator`` field at construction.
+* **Mask discipline.**  Every registered aggregator ignores dropped
+  (weight-0) clients entirely -- even NaN/Inf garbage -- returns exact zero
+  on an all-straggler round, and is jit- and vmap-safe.  The robust
+  aggregators additionally survive NaN updates from *participating* clients;
+  plain FedAvg demonstrably does not (that asymmetry is the point).
+* **Breakdown separation.**  Under the tuned 20% sign-flip cohort the
+  co-trained episode breaks plain FedAvg (accuracy collapses) while
+  trimmed-mean / median hold within ``invariants.ROBUST_ACC_DROP`` -- and
+  the attacked episode's *allocation* stream stays bitwise equal to
+  ``run_scan`` (the attack only touches uploads, never the market).
+* **Replay.**  Attack plans and bid deviations are deterministic functions
+  of ``(seed, period, channel)`` (PR 8 chaos schedule), so every adversarial
+  trajectory replays bitwise; audited bid deviations never gain more than
+  the Eq. 31 truthfulness bound (``invariants.regret_bounded``).
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.chaos import invariants
+from repro.chaos.bids import BidChaos, audit_deviation, deviate_bid
+from repro.chaos.clients import ATTACKS, AttackSpec, ClientChaos, attack_fn
+from repro.core import auction, network
+from repro.fl import aggregation, cotrain, server, simulator
+
+ROBUST = ("trimmed_mean", "median", "norm_clip", "krum", "multi_krum")
+
+
+def _deltas(rng, n_clients: int):
+    return {
+        "w": jnp.asarray(rng.normal(size=(n_clients, 3, 2)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(n_clients, 4)).astype(np.float32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Registry contract.
+# ---------------------------------------------------------------------------
+
+def test_registry_catalogue():
+    names = aggregation.available()
+    assert set(names) == {"fedavg", *ROBUST}
+    for name in names:
+        assert callable(aggregation.get_aggregator(name))
+
+
+def test_unknown_aggregator_and_option_raise():
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        aggregation.get_aggregator("geometric_median")
+    with pytest.raises(ValueError, match="options"):
+        aggregation.get_aggregator("trimmed_mean", banana=1)
+    with pytest.raises(ValueError, match="trim_frac"):
+        aggregation.get_aggregator("trimmed_mean", trim_frac=0.5)
+    with pytest.raises(ValueError, match="clip_norm"):
+        aggregation.get_aggregator("norm_clip", clip_norm=-1.0)
+
+
+def test_trainspec_rejects_unknown_aggregator():
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        cotrain.TrainSpec(aggregator="nope")
+
+
+# ---------------------------------------------------------------------------
+# Mask discipline, per aggregator.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(aggregation.available()))
+def test_dropped_client_garbage_never_contributes(name):
+    """Poisoning every weight-0 client with NaN must not move ANY
+    aggregator's output (dropped clients are outside the participant set,
+    whatever the reduction)."""
+    rng = np.random.default_rng(3)
+    deltas = _deltas(rng, 8)
+    weights = jnp.asarray([1.0, 0.0, 2.0, 1.0, 0.0, 1.0, 0.5, 0.0])
+    dropped = np.asarray(weights) == 0.0
+    poison = jax.tree.map(
+        lambda d: jnp.where(
+            jnp.asarray(dropped).reshape((-1,) + (1,) * (d.ndim - 1)),
+            jnp.float32(np.nan), d),
+        deltas)
+    agg = aggregation.get_aggregator(name)
+    base, poisoned = agg(deltas, weights), agg(poison, weights)
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k]),
+                                      np.asarray(poisoned[k]))
+        assert np.all(np.isfinite(np.asarray(poisoned[k])))
+
+
+@pytest.mark.parametrize("name", sorted(aggregation.available()))
+def test_all_dropped_round_is_exact_zero(name):
+    rng = np.random.default_rng(4)
+    deltas = _deltas(rng, 5)
+    agg = aggregation.get_aggregator(name)
+    out = agg(deltas, jnp.zeros((5,)))
+    for k in out:
+        np.testing.assert_array_equal(np.asarray(out[k]), 0.0)
+
+
+@pytest.mark.parametrize("name", ROBUST)
+def test_robust_aggregators_survive_participant_nan(name):
+    """A NaN update from a *participating* client: robust aggregators mask
+    it out of the participant set and stay finite."""
+    rng = np.random.default_rng(5)
+    deltas = _deltas(rng, 7)
+    deltas = jax.tree.map(lambda d: d.at[2].set(jnp.nan), deltas)
+    weights = jnp.ones((7,))
+    out = aggregation.get_aggregator(name)(deltas, weights)
+    for k in out:
+        assert np.all(np.isfinite(np.asarray(out[k]))), (name, k)
+
+
+def test_fedavg_poisoned_by_participant_nan():
+    """The asymmetry the robust catalogue exists for: plain FedAvg averages
+    a participating NaN straight into the model."""
+    rng = np.random.default_rng(5)
+    deltas = jax.tree.map(lambda d: d.at[2].set(jnp.nan), _deltas(rng, 7))
+    out = server.fedavg_round(deltas, jnp.ones((7,)))
+    assert any(not np.all(np.isfinite(np.asarray(out[k]))) for k in out)
+
+
+def test_median_matches_numpy_reference():
+    rng = np.random.default_rng(6)
+    deltas = _deltas(rng, 9)
+    weights = jnp.asarray([1, 1, 0, 1, 1, 1, 0, 1, 1], jnp.float32)
+    out = aggregation.get_aggregator("median")(deltas, weights)
+    part = np.asarray(weights) > 0
+    for k, d in deltas.items():
+        ref = np.median(np.asarray(d)[part], axis=0)
+        np.testing.assert_allclose(np.asarray(out[k]), ref, rtol=1e-6,
+                                   atol=1e-7)
+
+
+def test_trimmed_mean_matches_reference():
+    rng = np.random.default_rng(7)
+    deltas = _deltas(rng, 10)
+    weights = jnp.ones((10,))
+    out = aggregation.get_aggregator("trimmed_mean", trim_frac=0.2)(
+        deltas, weights)
+    for k, d in deltas.items():
+        srt = np.sort(np.asarray(d), axis=0)
+        ref = srt[2:-2].mean(axis=0)      # t = floor(0.2 * 10) = 2 per side
+        np.testing.assert_allclose(np.asarray(out[k]), ref, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_krum_picks_honest_cluster():
+    """Krum scores by distance to nearest neighbors: a lone far outlier is
+    never selected, and the chosen update is one of the honest cluster's."""
+    rng = np.random.default_rng(8)
+    honest = rng.normal(size=(6, 4)).astype(np.float32) * 0.1
+    deltas = {"w": jnp.asarray(np.vstack([honest, 100.0 + honest[:1]]))}
+    out = aggregation.get_aggregator("krum", byz_f=1)(
+        deltas, jnp.ones((7,)))
+    dists = np.linalg.norm(honest - np.asarray(out["w"]), axis=-1)
+    assert float(dists.min()) < 1e-6          # exactly one honest update
+    assert float(np.asarray(out["w"]).max()) < 50.0
+
+
+def test_norm_clip_bounds_the_aggregate():
+    rng = np.random.default_rng(9)
+    deltas = {"w": jnp.asarray(rng.normal(size=(5, 8)).astype(np.float32))}
+    deltas["w"] = deltas["w"].at[0].multiply(1e4)   # one inflated client
+    out = aggregation.get_aggregator("norm_clip", clip_norm=1.0)(
+        deltas, jnp.ones((5,)))
+    assert float(np.linalg.norm(np.asarray(out["w"]))) <= 1.0 + 1e-5
+
+
+@pytest.mark.parametrize("name", sorted(aggregation.available()))
+def test_aggregators_jit_and_vmap(name):
+    rng = np.random.default_rng(10)
+    agg = aggregation.get_aggregator(name)
+    deltas = _deltas(rng, 6)
+    weights = jnp.asarray([1, 1, 0, 1, 1, 1], jnp.float32)
+    jitted = jax.jit(agg)(deltas, weights)
+    for k, v in agg(deltas, weights).items():
+        np.testing.assert_allclose(np.asarray(jitted[k]), np.asarray(v),
+                                   rtol=1e-6, atol=1e-7)
+    stacked = jax.tree.map(lambda d: jnp.stack([d, 2 * d]), deltas)
+    batched = jax.vmap(agg, in_axes=(0, None))(stacked, weights)
+    for k in batched:
+        assert np.all(np.isfinite(np.asarray(batched[k])))
+        np.testing.assert_allclose(np.asarray(batched[k][0]),
+                                   np.asarray(jitted[k]), rtol=1e-6,
+                                   atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Attack catalogue: validation, determinism, semantics.
+# ---------------------------------------------------------------------------
+
+def test_attack_spec_validation():
+    with pytest.raises(ValueError, match="attack"):
+        AttackSpec(attack="teleport")
+    with pytest.raises(ValueError, match="byz_frac"):
+        AttackSpec(byz_frac=1.5)
+    assert AttackSpec().attack in ATTACKS
+
+
+def test_client_plan_is_deterministic_and_seeded():
+    spec = AttackSpec(attack="sign_flip", byz_frac=0.2, seed=3)
+    a = ClientChaos(spec).plan(8, 3, 10)
+    b = ClientChaos(spec).plan(8, 3, 10)
+    np.testing.assert_array_equal(a, b)
+    c = ClientChaos(dataclasses.replace(spec, seed=4)).plan(8, 3, 10)
+    assert not np.array_equal(a, c)
+    # marked fraction tracks byz_frac
+    frac = float(np.mean(a))
+    assert 0.05 < frac < 0.4
+
+
+def test_attack_fn_semantics():
+    spec = AttackSpec(attack="sign_flip", scale=2.0)
+    deltas = {"w": jnp.ones((4, 3))}
+    weights = jnp.ones((4,))
+    byz = jnp.asarray([True, False, False, True])
+    flipped, w2 = attack_fn(spec)(deltas, weights, byz)
+    np.testing.assert_array_equal(np.asarray(flipped["w"][0]), -2.0)
+    np.testing.assert_array_equal(np.asarray(flipped["w"][1]), 1.0)
+    np.testing.assert_array_equal(np.asarray(w2), np.asarray(weights))
+
+    nan_d, _ = attack_fn(AttackSpec(attack="nan"))(deltas, weights, byz)
+    assert np.all(np.isnan(np.asarray(nan_d["w"][0])))
+    assert np.all(np.isfinite(np.asarray(nan_d["w"][1])))
+
+    _, w3 = attack_fn(AttackSpec(attack="inflate_weight", scale=10.0))(
+        deltas, weights, byz)
+    np.testing.assert_array_equal(np.asarray(w3), [10.0, 1.0, 1.0, 10.0])
+
+
+# ---------------------------------------------------------------------------
+# Bid chaos: deviations replay and never beat the truthfulness bound.
+# ---------------------------------------------------------------------------
+
+def _bid_setup():
+    svc, _ = network.sample_services(jax.random.key(0), 5)
+    return svc, network.B_TOTAL_MHZ
+
+
+def test_bid_deviations_regret_bounded():
+    svc, B = _bid_setup()
+    rows = BidChaos(seed=11).run(svc, B, n_trials=4)
+    gate = invariants.regret_bounded(rows)
+    assert gate["ok"], gate
+    assert gate["n_audited"] == 4
+    for r in rows:
+        assert r["deviation"] in ("overbid", "shade", "free_ride")
+        assert np.isfinite(r["u_truthful"]) and np.isfinite(r["u_deviated"])
+
+
+def test_bid_chaos_replays_bitwise():
+    svc, B = _bid_setup()
+    a = BidChaos(seed=5).run(svc, B, n_trials=3)
+    b = BidChaos(seed=5).run(svc, B, n_trials=3)
+    assert a == b
+    c = BidChaos(seed=6).run(svc, B, n_trials=3)
+    assert a != c
+
+
+def test_deviate_bid_shapes_and_validation():
+    svc, _ = _bid_setup()
+    truthful = auction.uniform_truthful_bids(svc, 5, 0.5)
+    dev = deviate_bid(truthful, 1, "overbid", 2.0)
+    np.testing.assert_allclose(np.asarray(dev.demands)[1],
+                               np.asarray(truthful.demands)[1] * 2.0)
+    np.testing.assert_array_equal(np.asarray(dev.demands)[0],
+                                  np.asarray(truthful.demands)[0])
+    np.testing.assert_array_equal(np.asarray(dev.prices),
+                                  np.asarray(truthful.prices))
+    free = deviate_bid(truthful, 2, "free_ride", 0.0)
+    np.testing.assert_array_equal(np.asarray(free.demands)[2][1:], 0.0)
+    with pytest.raises(ValueError, match="deviation"):
+        deviate_bid(truthful, 0, "bribe", 1.0)
+
+
+def test_audit_deviation_reports_regret():
+    svc, B = _bid_setup()
+    row = audit_deviation(svc, B, 0, "shade", 0.5)
+    assert row["gain"] == pytest.approx(row["u_deviated"] - row["u_truthful"])
+    assert row["gain"] <= row["delta_bound"] + 1e-3
+    assert row["regret"] == max(0.0, row["gain"])
+
+
+# ---------------------------------------------------------------------------
+# Robustness gates (unit).
+# ---------------------------------------------------------------------------
+
+def test_gates_unit():
+    assert invariants.accuracy_bounded(0.6, 0.55)["ok"]
+    assert not invariants.accuracy_bounded(0.6, 0.2)["ok"]
+    assert not invariants.accuracy_bounded(0.6, float("nan"))["ok"]
+    assert invariants.params_finite({"w": jnp.ones((3,))})["ok"]
+    assert not invariants.params_finite(
+        {"w": jnp.asarray([1.0, jnp.nan])})["ok"]
+    with pytest.raises(AssertionError, match="accuracy"):
+        invariants.assert_robust(
+            {"accuracy": invariants.accuracy_bounded(0.6, 0.1)})
+
+
+# ---------------------------------------------------------------------------
+# Co-trained integration: the tuned separation scenario (see EXPERIMENTS.md
+# §Adversarial robustness).  One cached episode per aggregator.
+# ---------------------------------------------------------------------------
+
+NET = network.NetworkConfig(period_s=1.0, mean_clients=9.0, var_clients=1.0)
+BASE = dict(n_services_total=2, rounds_required=40, p_arrive=2.0,
+            max_periods=60, k_max=12, mean_clients=9.0, var_clients=1.0)
+TRAIN = cotrain.TrainSpec(vocab=16, seq_len=6, batch_size=2, eval_batch=32,
+                          rounds_cap=3)
+ATTACK = AttackSpec(attack="sign_flip", byz_frac=0.2, scale=20.0, seed=1)
+
+
+@functools.lru_cache(maxsize=None)
+def _episode(aggregator: str | None):
+    """Final mean accuracy (+ params finiteness, durations) for one tuned
+    episode; ``None`` = clean fedavg baseline."""
+    cfg = simulator.SimConfig(policy="coop", **BASE)
+    if aggregator is None:
+        out = cotrain.run_cotrain_scan(cfg, TRAIN, NET)
+    else:
+        spec = dataclasses.replace(TRAIN, aggregator=aggregator,
+                                   trim_frac=0.25, byz_f=3)
+        out = cotrain.run_cotrain_scan(cfg, spec, NET, attack=ATTACK)
+    acc = float(np.asarray(out["history"]["acc"])[out["periods"] - 1].mean())
+    finite = invariants.params_finite(out["params"])["ok"]
+    return acc, finite, tuple(out["durations"])
+
+
+def test_fedavg_breaks_under_sign_flip():
+    clean, _, _ = _episode(None)
+    attacked, _, _ = _episode("fedavg")
+    assert clean - attacked > 2 * invariants.ROBUST_ACC_DROP, (clean, attacked)
+
+
+@pytest.mark.parametrize("name", ["trimmed_mean", "median"])
+def test_robust_aggregators_hold_under_sign_flip(name):
+    clean, _, _ = _episode(None)
+    attacked, finite, _ = _episode(name)
+    gate = invariants.accuracy_bounded(clean, attacked)
+    assert gate["ok"], gate
+    assert finite
+
+
+def test_attack_never_touches_the_allocation_stream():
+    """Durations of the attacked episode are bitwise the duration engine's:
+    the adversary corrupts uploads, not the market."""
+    ref = simulator.run_scan(simulator.SimConfig(policy="coop", **BASE), NET)
+    for agg in (None, "fedavg", "trimmed_mean", "median"):
+        _, _, durations = _episode(agg)
+        assert list(durations) == ref["durations"], agg
+
+
+@pytest.mark.parametrize("policy,warm", [("coop", True), ("es", False)])
+@pytest.mark.parametrize("name", sorted(aggregation.available()))
+def test_trace_once_per_aggregator_policy_combo(name, policy, warm):
+    """Every aggregator rides the same single-trace episode scan, warm or
+    cold, and never perturbs the duration stream."""
+    cfg = simulator.SimConfig(policy=policy, warm_start=warm,
+                              n_services_total=2, rounds_required=8,
+                              p_arrive=2.0, max_periods=10, k_max=8,
+                              mean_clients=5.0, var_clients=1.0)
+    net = network.NetworkConfig(period_s=1.0, mean_clients=5.0,
+                                var_clients=1.0)
+    spec = dataclasses.replace(
+        cotrain.TrainSpec(vocab=16, seq_len=6, batch_size=2, eval_batch=8,
+                          rounds_cap=2),
+        aggregator=name)
+    simulator.reset_trace_count()
+    co = cotrain.run_cotrain_scan(cfg, spec, net)
+    assert simulator.trace_count() == 1
+    ref = simulator.run_scan(cfg, net)
+    assert co["durations"] == ref["durations"]

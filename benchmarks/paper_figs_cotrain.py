@@ -26,10 +26,24 @@ runs, mirroring the paper):
 * both market mechanisms finish services faster than the equal-share
   benchmarks (Fig. 12's duration ordering: coop/selfish < es/pp).
 
+Schema v2 adds the **compression frontier** (``frontier`` block): the same
+co-trained comparison swept over uplink compression levels (dense / topk /
+int8 / topk_int8 / the adaptive controller) x allocation policies on an
+uplink-dominated, bandwidth-starved network.  Each cell records the
+accuracy-time AUC, time to the target accuracy, and the realized s^UT
+multiplier -- the accuracy-vs-allocated-wallclock frontier the closed
+compression->allocation loop buys.  Two standing assertions: the dense
+("none") cells' duration streams are *bitwise* the duration engine's
+(``none_bitwise``, checked even on tiny runs -- compression support must
+not perturb the uncompressed path), and on full runs topk at the benched
+``k_frac`` dominates dense on time-to-target under tight bandwidth
+(compressing 13x buys more wall-clock than the sparser updates cost).
+
 ``--tiny`` is the CI smoke: a smoke-scaled ``gemma3-1b`` zoo transformer
 (task="zoo"), 2 services, 3 periods -- same schema, same validation path
 minus the ordering/clipping asserts (a 3-period smoke proves the plumbing,
-not the science).
+not the science).  The tiny frontier covers topk + int8 on 2 services and
+still pins ``none_bitwise``.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.paper_figs_cotrain [--tiny] [--out PATH]
@@ -47,7 +61,7 @@ import numpy as np
 from repro.core import network
 from repro.fl import cotrain, simulator
 
-SCHEMA = "bench_cotrain/v1"
+SCHEMA = "bench_cotrain/v2"
 DEFAULT_OUT = "BENCH_cotrain.json"
 ACC_TARGET = 0.55
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -72,6 +86,99 @@ def _setup(tiny: bool):
     train = cotrain.TrainSpec(vocab=32, seq_len=8, batch_size=4,
                               eval_batch=32, rounds_cap=14, client_lr=0.5)
     return net, cfg, train, list(range(8)), ("coop", "selfish", "es", "pp")
+
+
+def _frontier_setup(tiny: bool):
+    """(net, sim kwargs, base train spec, seeds, policies, levels).
+
+    The frontier network is uplink-dominated (UT powers an order below DT,
+    so s^UT/r^UT carries most of alpha) and bandwidth-starved -- the regime
+    where compressing the upload actually buys wall-clock.  Levels are
+    (name, TrainSpec overrides); every lossy level runs with error feedback
+    on, matching how the controller is meant to be deployed."""
+    topk = dict(compression="topk", topk_frac=0.05, index_bits=16,
+                error_feedback=True)
+    if tiny:
+        net = network.NetworkConfig(mean_clients=3.0, var_clients=1.0,
+                                    p_ul_lo=0.01, p_ul_hi=0.03)
+        cfg = dict(n_services_total=2, rounds_required=4, p_arrive=1.0,
+                   max_periods=3, k_max=5, mean_clients=3.0, var_clients=1.0)
+        train = cotrain.TrainSpec(vocab=16, seq_len=6, batch_size=2,
+                                  eval_batch=8, rounds_cap=2)
+        levels = (("none", {}), ("topk", topk),
+                  ("int8", dict(compression="int8", error_feedback=True)))
+        return net, cfg, train, [0, 1], ("coop",), levels
+    net = network.NetworkConfig(total_bandwidth_mhz=1.0, period_s=4.0,
+                                mean_clients=10.0, var_clients=6.0,
+                                t_local_lo=0.05, t_local_hi=0.1,
+                                p_ul_lo=0.01, p_ul_hi=0.03)
+    cfg = dict(n_services_total=4, rounds_required=40, p_arrive=3.0,
+               max_periods=56, k_max=16, mean_clients=10.0, var_clients=6.0)
+    train = cotrain.TrainSpec(vocab=32, seq_len=8, batch_size=4,
+                              eval_batch=32, rounds_cap=24, client_lr=0.5)
+    levels = (
+        ("none", {}),
+        ("topk", topk),
+        ("int8", dict(compression="int8", error_feedback=True)),
+        ("topk_int8", dict(compression="topk_int8", topk_frac=0.05,
+                           index_bits=16, error_feedback=True)),
+        ("adaptive", dict(**topk, comp_policy="adaptive",
+                          comp_threshold=0.75)),
+    )
+    return net, cfg, train, [0, 1, 2, 3], ("coop", "es"), levels
+
+
+def _run_frontier(tiny: bool) -> dict:
+    """Compression level x policy sweep -> the ``frontier`` block."""
+    net, cfg_kw, base_train, seeds, policies, levels = _frontier_setup(tiny)
+    block = {
+        "seeds": seeds,
+        "sim": {**cfg_kw},
+        "net": {"total_bandwidth_mhz": net.total_bandwidth_mhz,
+                "period_s": net.period_s, "p_ul_lo": net.p_ul_lo,
+                "p_ul_hi": net.p_ul_hi, "t_local_lo": net.t_local_lo,
+                "t_local_hi": net.t_local_hi},
+        "levels": {name: dict(kw) for name, kw in levels},
+        "cells": {},
+        "none_bitwise": True,
+    }
+    for pol in policies:
+        cfg = simulator.SimConfig(policy=pol, **cfg_kw)
+        ref_durations = np.asarray(
+            simulator.run_batch(cfg, seeds, net)["durations"])
+        block["cells"][pol] = {}
+        for name, kw in levels:
+            train = dataclasses.replace(base_train, **kw)
+            out = cotrain.run_cotrain_fleet(cfg, train, seeds, net,
+                                            chunk_size=4)
+            acc = np.asarray(out["history"]["acc"])        # (S, T, N)
+            time_s = np.asarray(out["time_s"])
+            per_seed = acc.mean(axis=2)
+            tta = _time_to_acc(acc, time_s, ACC_TARGET)
+            if name == "none":
+                block["none_bitwise"] &= bool(np.array_equal(
+                    np.asarray(out["durations"]), ref_durations))
+            block["cells"][pol][name] = {
+                "auc": float(per_seed.mean()),
+                "time_to_acc_mean": float(tta.mean()),
+                "acc_mean": per_seed.mean(axis=0).tolist(),
+                "time_s": time_s.tolist(),
+                "ul_mult_mean": float(
+                    np.mean(np.asarray(out["history"]["ul_mult"]))),
+                "avg_duration_periods": float(np.mean(out["avg_duration"])),
+                "clipped_rounds": int(np.sum(out["clipped_rounds"])),
+                "finished": bool(np.all(out["finished"])),
+            }
+    block["dominance"] = {
+        pol: {
+            "tta_none": cells["none"]["time_to_acc_mean"],
+            "tta_topk": cells["topk"]["time_to_acc_mean"],
+            "topk_beats_dense": bool(cells["topk"]["time_to_acc_mean"]
+                                     < cells["none"]["time_to_acc_mean"]),
+        }
+        for pol, cells in block["cells"].items()
+    }
+    return block
 
 
 def _time_to_acc(acc: np.ndarray, time_s: np.ndarray, target: float):
@@ -144,6 +251,7 @@ def run(tiny: bool = False) -> dict:
         "equal_share_slower": bool(all(
             dur[e] >= dur[m] - 0.25 for e in eq_share for m in market)),
     }
+    data["frontier"] = _run_frontier(tiny)
     return data
 
 
@@ -171,6 +279,26 @@ def validate(data: dict) -> None:
         assert rec["fleet"]["n_devices"] >= 1, name
     order = data["ordering"]
     assert set(order["auc"]) == set(pols)
+
+    frontier = data["frontier"]
+    # the dense cells must replay the duration engine bitwise -- ALWAYS,
+    # tiny included: compression support must not perturb the "none" path
+    assert frontier["none_bitwise"], "dense frontier cells diverged from " \
+        "the duration engine"
+    assert set(frontier["levels"]) >= {"none", "topk", "int8"}
+    for pol, cells in frontier["cells"].items():
+        assert set(cells) == set(frontier["levels"]), (pol, sorted(cells))
+        for name, cell in cells.items():
+            t = cell["time_s"]
+            assert len(cell["acc_mean"]) == len(t) > 0, (pol, name)
+            assert all(0.0 <= a <= 1.0 for a in cell["acc_mean"]), (pol, name)
+            assert 0.0 < cell["ul_mult_mean"] <= 1.0, (pol, name)
+            assert cell["clipped_rounds"] >= 0, (pol, name)
+        # dense prices dense; every lossy level prices below dense
+        assert cells["none"]["ul_mult_mean"] == 1.0, pol
+        for name in set(cells) - {"none"}:
+            assert cells[name]["ul_mult_mean"] < 1.0, (pol, name)
+
     if not data["tiny"]:
         for name, rec in pols.items():
             assert rec["finished"], f"{name}: unfinished episodes"
@@ -178,6 +306,14 @@ def validate(data: dict) -> None:
                 f"{name}: clipped rounds equalize the comparison")
         assert order["coop_auction_consistent"], order
         assert order["equal_share_slower"], order
+        # the frontier's headline: under tight, uplink-dominated bandwidth
+        # topk at the benched k_frac reaches the target accuracy FASTER
+        # than dense, for every benched policy
+        for pol, dom in frontier["dominance"].items():
+            assert dom["topk_beats_dense"], (pol, dom)
+        for pol, cells in frontier["cells"].items():
+            for name, cell in cells.items():
+                assert cell["clipped_rounds"] == 0, (pol, name)
 
 
 def run_rows(tiny: bool = False) -> list[dict]:
@@ -206,6 +342,17 @@ def run_rows(tiny: bool = False) -> list[dict]:
         "cotrain/ordering", None,
         f"coop_auction={order['coop_auction_consistent']} "
         f"equal_share_slower={order['equal_share_slower']}"))
+    frontier = data["frontier"]
+    for pol, cells in frontier["cells"].items():
+        for name, cell in cells.items():
+            rows.append(common.row(
+                f"cotrain/frontier/{pol}/{name}", None,
+                f"auc={cell['auc']:.4f} "
+                f"tta{data['acc_target']}={cell['time_to_acc_mean']:.1f}s "
+                f"ul_mult={cell['ul_mult_mean']:.3f}"))
+    rows.append(common.row(
+        "cotrain/frontier/none_bitwise", None,
+        f"ok={frontier['none_bitwise']}"))
     return rows
 
 
@@ -228,6 +375,14 @@ def main() -> None:
               f"avg_duration={rec['avg_duration_periods']:.2f} periods "
               f"clipped={rec['clipped_rounds']}")
     print(f"ordering: {data['ordering']}")
+    for pol, cells in data["frontier"]["cells"].items():
+        for name, cell in cells.items():
+            print(f"frontier {pol}/{name}: auc={cell['auc']:.4f} "
+                  f"tta={cell['time_to_acc_mean']:.1f}s "
+                  f"ul_mult={cell['ul_mult_mean']:.3f} "
+                  f"clipped={cell['clipped_rounds']}")
+    print(f"none_bitwise: {data['frontier']['none_bitwise']} "
+          f"dominance: {data['frontier']['dominance']}")
 
 
 if __name__ == "__main__":

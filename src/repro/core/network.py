@@ -126,11 +126,13 @@ def sample_services(
     r_ul = base_rate(p_ul, pl_clients, cfg.noise_w)
 
     alpha = size_mbit / r_dl + size_mbit / r_ul
+    alpha_ul = size_mbit / r_ul
     t_comp = t_local + cfg.t_global
     alpha = jnp.where(mask, alpha, 0.0).astype(jnp.float32)
+    alpha_ul = jnp.where(mask, alpha_ul, 0.0).astype(jnp.float32)
     t_comp = jnp.where(mask, t_comp, 0.0).astype(jnp.float32)
 
-    svc = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+    svc = ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask, alpha_ul=alpha_ul)
     meta = {
         "client_counts": client_counts,
         "pathloss_db": pl_clients,

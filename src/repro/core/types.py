@@ -44,11 +44,18 @@ class ServiceSet(NamedTuple):
       t_comp: (N, K) float -- per-client compute latency t^C_{n,k} [s].
               Ignored (masked) for padded slots.
       mask:   (N, K) bool  -- True for real clients.
+      alpha_ul: (N, K) float or None -- the *dense* uplink component
+              s^UT/r^UT_k of alpha [MHz*s].  Optional: solvers never read it;
+              it exists so uplink compression can rescale s^UT per period
+              (``scale_uplink``) without re-deriving channel rates.  ``None``
+              (the default everywhere it is not needed) keeps the pytree and
+              every traced graph identical to the historical 3-field set.
     """
 
     alpha: jax.Array
     t_comp: jax.Array
     mask: jax.Array
+    alpha_ul: jax.Array | None = None
 
     @property
     def n_services(self) -> int:
@@ -79,7 +86,7 @@ class ServiceSet(NamedTuple):
         return jnp.any(self.mask, axis=-1)
 
 
-def make_service_set(alpha, t_comp, mask=None) -> ServiceSet:
+def make_service_set(alpha, t_comp, mask=None, alpha_ul=None) -> ServiceSet:
     alpha = jnp.asarray(alpha, dtype=jnp.float32)
     t_comp = jnp.asarray(t_comp, dtype=jnp.float32)
     if alpha.ndim == 1:
@@ -91,7 +98,12 @@ def make_service_set(alpha, t_comp, mask=None) -> ServiceSet:
         if mask.ndim == 1:
             mask = mask[None]
     alpha = jnp.where(mask, alpha, 0.0)
-    return ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+    if alpha_ul is not None:
+        alpha_ul = jnp.asarray(alpha_ul, dtype=jnp.float32)
+        if alpha_ul.ndim == 1:
+            alpha_ul = alpha_ul[None]
+        alpha_ul = jnp.where(mask, alpha_ul, 0.0)
+    return ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask, alpha_ul=alpha_ul)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,22 +125,32 @@ class RawServiceParams:
         t_comp = self.t_local + self.t_global
         return alpha, t_comp
 
+    def reduce_parts(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Like ``reduce`` but also returns the uplink component s^UT/r^UT
+        separately, for ServiceSets that carry the dynamic-s^UT column."""
+        alpha_ul = self.s_ul_mbit / self.r_ul
+        alpha = self.s_dl_mbit / self.r_dl + self.s_ul_mbit / self.r_ul
+        t_comp = self.t_local + self.t_global
+        return alpha, t_comp, alpha_ul
+
 
 def stack_services(params: list[RawServiceParams], k_max: int | None = None) -> ServiceSet:
     """Pad a heterogeneous list of services into one rectangular ServiceSet."""
-    reduced = [p.reduce() for p in params]
-    counts = [int(a.shape[0]) for a, _ in reduced]
+    reduced = [p.reduce_parts() for p in params]
+    counts = [int(a.shape[0]) for a, _, _ in reduced]
     k_pad = k_max if k_max is not None else max(counts)
     n = len(params)
     alpha = jnp.zeros((n, k_pad), dtype=jnp.float32)
     t_comp = jnp.zeros((n, k_pad), dtype=jnp.float32)
+    alpha_ul = jnp.zeros((n, k_pad), dtype=jnp.float32)
     mask = jnp.zeros((n, k_pad), dtype=bool)
-    for i, (a, tc) in enumerate(reduced):
+    for i, (a, tc, aul) in enumerate(reduced):
         k = counts[i]
         alpha = alpha.at[i, :k].set(a.astype(jnp.float32))
         t_comp = t_comp.at[i, :k].set(tc.astype(jnp.float32))
+        alpha_ul = alpha_ul.at[i, :k].set(aul.astype(jnp.float32))
         mask = mask.at[i, :k].set(True)
-    return ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask)
+    return ServiceSet(alpha=alpha, t_comp=t_comp, mask=mask, alpha_ul=alpha_ul)
 
 
 def mask_inactive(svc: ServiceSet, active: jax.Array) -> ServiceSet:
@@ -145,6 +167,8 @@ def mask_inactive(svc: ServiceSet, active: jax.Array) -> ServiceSet:
         alpha=jnp.where(keep, svc.alpha, 0.0),
         t_comp=jnp.where(keep, svc.t_comp, 0.0),
         mask=keep,
+        alpha_ul=(None if svc.alpha_ul is None
+                  else jnp.where(keep, svc.alpha_ul, 0.0)),
     )
 
 
@@ -163,7 +187,32 @@ def mask_clients(svc: ServiceSet, available: jax.Array) -> ServiceSet:
         alpha=jnp.where(keep, svc.alpha, 0.0),
         t_comp=jnp.where(keep, svc.t_comp, 0.0),
         mask=keep,
+        alpha_ul=(None if svc.alpha_ul is None
+                  else jnp.where(keep, svc.alpha_ul, 0.0)),
     )
+
+
+def scale_uplink(svc: ServiceSet, ul_mult: jax.Array) -> ServiceSet:
+    """Rescale each service's uplink payload s^UT by a per-service multiplier.
+
+    ``ul_mult``: (N,) float in (0, 1] -- the ``compression_ratio`` of the
+    level each service transmits at this period.  The effective load becomes
+
+        alpha' = alpha - (1 - ul_mult_n) * alpha_ul
+
+    i.e. the downlink component is untouched and the uplink component shrinks
+    to ``ul_mult_n`` of dense.  ``alpha_ul`` itself stays the *dense* uplink
+    load so the scaling is absolute, never compounding across periods.
+    Requires the dynamic-s^UT column (``alpha_ul is not None``).
+    """
+    if svc.alpha_ul is None:
+        raise ValueError(
+            "scale_uplink needs ServiceSet.alpha_ul (the dynamic s^UT "
+            "column); build the set via sample_services/stack_services or "
+            "pass alpha_ul to make_service_set")
+    m = jnp.clip(jnp.asarray(ul_mult, dtype=svc.alpha.dtype), 0.0, 1.0)
+    alpha = svc.alpha - (1.0 - m[:, None]) * svc.alpha_ul
+    return svc._replace(alpha=alpha)
 
 
 def round_time_given_alloc(svc: ServiceSet, b_clients: jax.Array) -> jax.Array:

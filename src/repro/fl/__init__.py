@@ -1,9 +1,20 @@
 """Federated-learning runtime: services (the paper's tuple abstraction over
 real architectures), client local training, FedAvg/FedProx servers with
-straggler mitigation, uplink gradient compression (feeds the allocator's
-s^UT), and the multi-period wall-clock simulator behind Figs. 11-15."""
+straggler mitigation, and the multi-period wall-clock simulator behind
+Figs. 11-15.
+
+Uplink gradient compression is a closed loop, not a bolt-on: each service's
+level prices its ``compression_ratio`` into the allocator's s^UT (statically
+via ``arch_service_tuple``, per period via the ServiceSet's dynamic uplink
+column and ``cotrain``'s compression controller), while the round step
+applies the same level's lossy operator to the uploaded deltas -- with real
+client-held error-feedback residuals (``make_fl_round_step``'s
+``error_feedback`` mode; ``init_residuals`` builds the zero state) carried
+across rounds so the withheld mass is re-injected, never dropped.
+"""
 from repro.fl.service import (FLService, arch_service_tuple,  # noqa: F401
                               episode_services)
 from repro.fl.client import local_update  # noqa: F401
-from repro.fl.server import fedavg_round, make_fl_round_step  # noqa: F401
+from repro.fl.server import (fedavg_round, init_residuals,  # noqa: F401
+                             make_fl_round_step)
 from repro.fl import aggregation, compression, cotrain, simulator  # noqa: F401

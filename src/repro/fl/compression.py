@@ -3,18 +3,34 @@
 Compression shrinks the UT payload s^UT, which feeds straight back into the
 allocator's alpha_{n,k} = s^DT/r^DT + s^UT/r^UT -- the paper's tuple
 abstraction makes communication-efficiency methods and bandwidth allocation
-compose cleanly (DESIGN.md §3.5).
+compose cleanly (DESIGN.md §3.5).  The loop is closed end-to-end by the
+co-simulation: ``cotrain.TrainSpec`` selects a per-service level (static or
+adaptive), ``compression_ratio`` prices it into the ServiceSet's dynamic
+s^UT column (``types.scale_uplink``) *before* the allocator runs, and the
+round step applies the matching lossy operator to the uploaded deltas -- so
+compressing harder buys shorter rounds at the price of noisier updates.
 
 Implemented: top-k magnitude sparsification (per-leaf) and symmetric int8
 quantization, both with client-held error-feedback residuals so the lossy
-round-trip error is re-injected next round (Karimireddy et al. style).
-``compression_ratio`` reports the s^UT multiplier the service plugs into
-``arch_service_tuple``.
+round-trip error is re-injected next round (Karimireddy et al. style).  The
+residuals are live in training, not just available here:
+``server.make_fl_round_step(error_feedback=True)`` threads per-client
+residual state through every round (and ``fl.cotrain`` carries it through
+the episode scan), gated on participation so a straggler's withheld mass is
+neither dropped nor double-counted.  ``compression_ratio`` reports the s^UT
+multiplier the service plugs into ``arch_service_tuple`` -- clamped at 1.0,
+since "compressing" must never price an upload above dense.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
+
+# Registry of uplink compression methods, in the order the co-simulation's
+# per-service branch ids use ("none" is always id 0).
+METHODS = ("none", "topk", "int8", "topk_int8")
 
 
 def topk_sparsify(delta, k_frac: float, residual=None):
@@ -58,16 +74,70 @@ def int8_quantize(delta, residual=None):
     return deq, new_residual
 
 
+def compress(method: str, delta, k_frac: float = 0.01, residual=None):
+    """Apply ``method`` to a delta pytree.  Returns (compressed, residual').
+
+    One dispatch for every registry entry so the server and tests cannot
+    drift from the ratio pricing: ``"none"`` is the identity compressor --
+    under error feedback it *flushes* the carried residual (the dense upload
+    has room for the backlog a lossy period withheld, exactly what an
+    adaptive controller switching back to uncompressed should do) and on a
+    zero residual it is a bitwise no-op; ``"topk_int8"`` composes the two
+    lossy stages under ONE residual (the error-feedback state absorbs the
+    *total* round-trip error of the composition, not just the first
+    stage's).
+    """
+    if method == "none":
+        if residual is None:
+            return delta, None
+        flushed = jax.tree.map(lambda d, r: d + r.astype(d.dtype),
+                               delta, residual)
+        return flushed, jax.tree.map(jnp.zeros_like, residual)
+    if method == "topk":
+        return topk_sparsify(delta, k_frac, residual)
+    if method == "int8":
+        return int8_quantize(delta, residual)
+    if method == "topk_int8":
+        if residual is not None:
+            delta = jax.tree.map(lambda d, r: d + r.astype(d.dtype),
+                                 delta, residual)
+        sparse, _ = topk_sparsify(delta, k_frac)
+        deq, _ = int8_quantize(sparse)
+        new_residual = jax.tree.map(lambda d, s: d - s, delta, deq)
+        return deq, new_residual
+    raise ValueError(
+        f"unknown compression method {method!r}; available: {METHODS}")
+
+
 def compression_ratio(method: str, k_frac: float = 0.01,
                       weight_bits: int = 32, index_bits: int = 32) -> float:
-    """s^UT multiplier vs dense fp32 upload."""
+    """s^UT multiplier vs dense fp32 upload, clamped to <= 1.0.
+
+    Top-k transmits values + indices, so at large ``k_frac`` (or wide
+    ``index_bits``) the naive ratio exceeds 1.0 -- a "compressed" upload
+    priced *above* dense.  That can never be what the allocator should see
+    (a client would just send the dense tensor), so ratios are clamped at
+    1.0 with a warning instead of silently inflating s^UT.
+    """
+    if method not in METHODS:
+        raise ValueError(
+            f"unknown compression method {method!r}; available: {METHODS}")
+    if method != "none" and "topk" in method and not 0.0 < k_frac <= 1.0:
+        raise ValueError(f"k_frac must be in (0, 1], got {k_frac}")
     if method == "none":
         return 1.0
     if method == "int8":
-        return 8.0 / weight_bits
-    if method == "topk":
+        ratio = 8.0 / weight_bits
+    elif method == "topk":
         # values + indices for the kept entries
-        return k_frac * (weight_bits + index_bits) / weight_bits
-    if method == "topk_int8":
-        return k_frac * (8.0 + index_bits) / weight_bits
-    raise ValueError(method)
+        ratio = k_frac * (weight_bits + index_bits) / weight_bits
+    else:  # topk_int8
+        ratio = k_frac * (8.0 + index_bits) / weight_bits
+    if ratio > 1.0:
+        warnings.warn(
+            f"compression_ratio({method!r}, k_frac={k_frac}, "
+            f"index_bits={index_bits}) = {ratio:.3f} exceeds dense; "
+            f"clamping s^UT multiplier to 1.0 (send dense instead)",
+            stacklevel=2)
+        return 1.0
+    return float(ratio)

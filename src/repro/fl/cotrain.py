@@ -25,11 +25,18 @@ training (``fl.server.make_fl_round_step``), so every simulated period
   3. evaluates every service's model, accumulating per-service loss/accuracy
      curves against the cumulative allocated wall-clock.
 
-The coupling is strictly one-way by construction: training reads the
-allocation extras that ``_period_step`` already computed and writes nothing
-back, so the duration stream of a co-trained episode is **bitwise identical**
-to ``run_scan`` on the same config (pinned per policy in
-tests/test_cotrain.py).  Like the duration engines, the whole episode is one
+With compression off the coupling is strictly one-way by construction:
+training reads the allocation extras that ``_period_step`` already computed
+and writes nothing back, so the duration stream of a co-trained episode is
+**bitwise identical** to ``run_scan`` on the same config (pinned per policy
+in tests/test_cotrain.py).  Turning compression on (``TrainSpec.compression``
+/ ``comp_levels`` / ``comp_policy="adaptive"``) closes the loop the other
+way too: each service's level prices a smaller s^UT into the allocator via
+the ServiceSet's dynamic uplink column (``_period_step``'s ``ul_comp`` hook),
+so compressing harder shortens rounds, shifts the bandwidth split, and moves
+the accuracy-vs-allocated-wallclock frontier -- while the round step applies
+the *same* level's lossy operator (with optional error-feedback residuals
+riding the scan carry) to what the clients upload.  Like the duration engines, the whole episode is one
 ``jax.lax.scan`` (the allocation step traces exactly once per
 policy x scenario combo -- ``simulator.trace_count()``), ``run_cotrain_batch``
 vmaps it over seeds, and ``run_cotrain_fleet`` shards it over a one-axis
@@ -67,6 +74,7 @@ import numpy as np
 from repro import scenarios
 from repro.core import network, policy as policy_mod
 from repro.data import SyntheticLM
+from repro.fl import compression as fl_comp
 from repro.fl import server as fl_server
 from repro.fl import service as fl_service
 from repro.fl import simulator
@@ -99,6 +107,22 @@ class TrainSpec:
     the round time, the deadline is all-or-nothing per service (see the
     module docstring): values >= 1 admit everyone the churn process left,
     values < 1 drop everyone.
+
+    Compression is a *first-class allocation control*, not just a training
+    perturbation: the selected level's ``compression_ratio`` rescales the
+    ServiceSet's dynamic s^UT column (``types.scale_uplink``) before the
+    allocator prices the period, so compressing harder shortens rounds and
+    shifts the bandwidth split.  ``compression`` sets one level for every
+    service; ``comp_levels`` (a tuple cycled over the service slots)
+    overrides it per service.  ``comp_policy="adaptive"`` turns the level
+    into a per-period control: a service starts uncompressed and switches to
+    its target level whenever its allocated share drops below
+    ``comp_threshold`` times the fair share B/n_active (and back when
+    bandwidth loosens).  ``error_feedback`` carries client-held compression
+    residuals through the episode scan (``server.make_fl_round_step``'s EF
+    mode); ``index_bits`` is the per-kept-entry index width priced into the
+    top-k ratios.  All of it defaults off: ``compression="none"`` episodes
+    stay bitwise identical to the duration engines and the goldens.
     """
 
     task: str = "bigram"              # "bigram" | "zoo"
@@ -113,6 +137,11 @@ class TrainSpec:
     prox_mu: float = 0.0
     compression: str = "none"         # fl.compression key, feeds the round step
     topk_frac: float = 0.01
+    index_bits: int = 32              # index width priced into topk ratios
+    comp_levels: tuple | None = None  # per-service levels, cycled over slots
+    comp_policy: str = "static"       # "static" | "adaptive"
+    comp_threshold: float = 0.5       # adaptive: compress when b < thr*fair
+    error_feedback: bool = False      # client-held EF residuals in the carry
     deadline_x: float = 3.0
     rounds_cap: int = 4
     data_seed: int = 0
@@ -137,19 +166,91 @@ class TrainSpec:
             raise ValueError(
                 f"unknown aggregator {self.aggregator!r}; "
                 f"available: {list(aggregation.available())}")
+        if self.comp_levels is not None and (
+                not isinstance(self.comp_levels, tuple)
+                or not self.comp_levels):
+            raise ValueError(
+                f"comp_levels must be a non-empty tuple of method names "
+                f"(hashable: TrainSpec is a jit static), got "
+                f"{self.comp_levels!r}")
+        from repro.fl import compression as fl_comp
+        for level in (self.compression,) + (self.comp_levels or ()):
+            if level not in fl_comp.METHODS:
+                raise ValueError(
+                    f"unknown compression level {level!r}; "
+                    f"available: {fl_comp.METHODS}")
+        if self.comp_policy not in ("static", "adaptive"):
+            raise ValueError(
+                f"comp_policy must be 'static' or 'adaptive', got "
+                f"{self.comp_policy!r}")
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError(
+                f"topk_frac must be in (0, 1], got {self.topk_frac}")
+        if not self.comp_threshold > 0:
+            raise ValueError(
+                f"comp_threshold must be positive, got {self.comp_threshold}")
 
 
 class _Task:
     """Bundle the episode needs from a TrainSpec: per-service ``init(key)``,
     the jitted-together FedAvg ``round_step``, a ``batch_fn(svc_id, round)``
     producing the (C, E, ...) client batches, and ``eval_fn(params, svc_id)
-    -> (loss, accuracy)`` on the service's held-out stream."""
+    -> (loss, accuracy)`` on the service's held-out stream.
 
-    def __init__(self, init, round_step, batch_fn, eval_fn):
+    ``steps`` (when the episode's compression plan needs it) is a tuple of
+    round steps -- one per plan branch method, identical kwargs apart from
+    ``compression`` -- dispatched per service via ``lax.switch`` (or called
+    directly when the plan is uniform).  ``round_step`` stays the plain
+    ``spec.compression`` step for callers outside the episode (tests, the
+    launch driver's replay helpers)."""
+
+    def __init__(self, init, round_step, batch_fn, eval_fn, steps=None):
         self.init = init
         self.round_step = round_step
         self.batch_fn = batch_fn
         self.eval_fn = eval_fn
+        self.steps = steps
+
+
+class _CompPlan:
+    """Static (trace-time) per-service compression plan for one episode.
+
+    ``methods``: the distinct branch methods, ``methods[0] == "none"``.
+    ``level_ids``: (N,) int -- each service's *target* branch index.
+    ``ratios``: per-branch s^UT multipliers (``compression_ratio``, clamped).
+    ``adaptive``: whether the applied level is the per-period carry (switching
+    between 0 and the target id) rather than the static target itself.
+    """
+
+    def __init__(self, methods, level_ids, ratios, adaptive):
+        self.methods = methods
+        self.level_ids = level_ids
+        self.ratios = ratios
+        self.adaptive = adaptive
+        # One distinct non-none static level needs no per-service dispatch.
+        self.multi = adaptive or len(set(level_ids.tolist())) > 1
+        self.branch_methods = (
+            methods if self.multi else (methods[int(level_ids[0])],))
+
+
+def _comp_plan(spec: TrainSpec, n_total: int) -> _CompPlan | None:
+    """Resolve the spec's compression knobs for an episode of ``n_total``
+    service slots.  Returns None when compression is fully off -- the
+    episode then runs the exact historical (bitwise-pinned) graph."""
+    levels = (spec.comp_levels if spec.comp_levels is not None
+              else (spec.compression,))
+    levels = tuple(levels[i % len(levels)] for i in range(n_total))
+    if all(m == "none" for m in levels):
+        return None
+    methods = ("none",) + tuple(
+        dict.fromkeys(m for m in levels if m != "none"))
+    level_ids = np.array([methods.index(m) for m in levels], np.int32)
+    ratios = np.array(
+        [fl_comp.compression_ratio(m, spec.topk_frac,
+                                   index_bits=spec.index_bits)
+         for m in methods], np.float32)
+    return _CompPlan(methods, level_ids, ratios,
+                     spec.comp_policy == "adaptive")
 
 
 def _eval_metrics(logits, labels):
@@ -183,12 +284,31 @@ def _round_step_kwargs(spec: TrainSpec, attack) -> dict:
         local_steps=spec.local_steps, client_lr=spec.client_lr,
         server_lr=spec.server_lr, prox_mu=spec.prox_mu,
         compression=spec.compression, topk_frac=spec.topk_frac,
+        error_feedback=spec.error_feedback,
         aggregator=spec.aggregator, trim_frac=spec.trim_frac,
         clip_norm=spec.clip_norm, byz_f=spec.byz_f,
         weight_cap=spec.weight_cap, attack=attack)
 
 
-def _bigram_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
+def _make_steps(loss_fn, spec: TrainSpec, attack, methods):
+    """The default (``spec.compression``) round step plus, when the episode's
+    compression plan asks for ``methods``, one step per branch method --
+    identical kwargs apart from ``compression`` so every ``lax.switch``
+    branch shares signature and output structure."""
+    kwargs = _round_step_kwargs(spec, attack)
+    round_step = fl_server.make_fl_round_step(loss_fn, **kwargs)
+    steps = None
+    if methods is not None:
+        steps = tuple(
+            round_step if m == spec.compression
+            else fl_server.make_fl_round_step(
+                loss_fn, **{**kwargs, "compression": m})
+            for m in methods)
+    return round_step, steps
+
+
+def _bigram_task(spec: TrainSpec, k_max: int, attack=None,
+                 methods=None) -> _Task:
     data = SyntheticLM(vocab_size=spec.vocab, seq_len=spec.seq_len,
                        seed=spec.data_seed, temperature=spec.data_temperature)
 
@@ -203,8 +323,7 @@ def _bigram_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
         return 0.01 * jax.random.normal(
             key, (spec.vocab, spec.vocab), jnp.float32)
 
-    round_step = fl_server.make_fl_round_step(
-        loss_fn, **_round_step_kwargs(spec, attack))
+    round_step, steps = _make_steps(loss_fn, spec, attack, methods)
 
     def batch_fn(svc_id, round_idx):
         return _stacked_batches(data, spec, svc_id, round_idx, k_max)
@@ -214,10 +333,11 @@ def _bigram_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
                            client_id=svc_id * _SVC_STRIDE + _EVAL_CLIENT)
         return _eval_metrics(table[batch["tokens"]], batch["labels"])
 
-    return _Task(init, round_step, batch_fn, eval_fn)
+    return _Task(init, round_step, batch_fn, eval_fn, steps)
 
 
-def _zoo_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
+def _zoo_task(spec: TrainSpec, k_max: int, attack=None,
+              methods=None) -> _Task:
     from repro import configs
 
     cfg = configs.get_smoke_config(spec.arch)
@@ -229,8 +349,7 @@ def _zoo_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=spec.seq_len,
                        seed=spec.data_seed, temperature=spec.data_temperature)
 
-    round_step = fl_server.make_fl_round_step(
-        model.loss, **_round_step_kwargs(spec, attack))
+    round_step, steps = _make_steps(model.loss, spec, attack, methods)
 
     def batch_fn(svc_id, round_idx):
         return _stacked_batches(data, spec, svc_id, round_idx, k_max)
@@ -241,14 +360,15 @@ def _zoo_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
         logits = model.forward(params, batch["tokens"])[0]
         return _eval_metrics(logits, batch["labels"])
 
-    return _Task(model.init, round_step, batch_fn, eval_fn)
+    return _Task(model.init, round_step, batch_fn, eval_fn, steps)
 
 
-def _build_task(spec: TrainSpec, k_max: int, attack=None) -> _Task:
+def _build_task(spec: TrainSpec, k_max: int, attack=None,
+                methods=None) -> _Task:
     if spec.task == "bigram":
-        return _bigram_task(spec, k_max, attack)
+        return _bigram_task(spec, k_max, attack, methods)
     if spec.task == "zoo":
-        return _zoo_task(spec, k_max, attack)
+        return _zoo_task(spec, k_max, attack, methods)
     raise ValueError(
         f"unknown train task {spec.task!r}; expected 'bigram' or 'zoo'")
 
@@ -274,13 +394,31 @@ def _cotrain_episode_impl(arrivals, counts, key, *, train, attack, policy,
     churn_proc = scenarios.get_churn(churn, net)
 
     # -- the training side: task closures + the allocated-latency model.
-    task = _build_task(train, k_max, attack)
+    # The compression plan decides which round-step branches exist and what
+    # s^UT multiplier the allocator prices each period; None (compression
+    # fully off) runs the exact historical graph.
+    plan = _comp_plan(train, n_total)
+    ef = train.error_feedback
+    task = _build_task(
+        train, k_max, attack,
+        methods=(plan.branch_methods if plan is not None else ("none",)))
     split_fn = policy_mod.client_split_fn(intra_backend)
     time_fn = policy_mod.round_time_fn(intra_backend)
     svc_ids = jnp.arange(n_total, dtype=jnp.int32)
     k_init = jax.random.fold_in(key, COTRAIN_SALT)
     params0 = jax.vmap(lambda i: task.init(jax.random.fold_in(k_init, i)))(
         svc_ids)
+    # Client-held EF residual state: params-shaped with (N, k_max) leading
+    # axes, zero-init; () when EF is off so the default carry is unchanged.
+    resid0 = () if not ef else jax.tree.map(
+        lambda p: jnp.zeros((n_total, k_max) + p.shape[1:], p.dtype), params0)
+    if plan is not None:
+        level_ids = jnp.asarray(plan.level_ids)
+        ratios = jnp.asarray(plan.ratios)
+    # Adaptive plans carry the applied per-service branch id across periods
+    # (a service starts uncompressed); static plans close over the constant.
+    comp0 = (jnp.zeros((n_total,), jnp.int32)
+             if plan is not None and plan.adaptive else ())
     if attack is not None:
         # Host-side (trace-time) Byzantine plan on the chaos channels: a
         # deterministic function of the static AttackSpec, so the compiled
@@ -291,37 +429,59 @@ def _cotrain_episode_impl(arrivals, counts, key, *, train, attack, policy,
         byz_plan = jnp.asarray(chaos_clients.ClientChaos(attack).plan(
             max_periods, n_total, k_max))
 
-    def train_service(svc_id, params, first_round, n_rounds, weights,
-                      byz=None):
+    def train_service(svc_id, params, resid, comp_id, first_round, n_rounds,
+                      weights, byz=None):
         """Advance one service ``n_rounds`` FedAvg rounds (static bound
-        ``rounds_cap``; skipped rounds are identity on params)."""
+        ``rounds_cap``; skipped rounds are identity on params -- and, under
+        EF, on the clients' residuals).  ``comp_id`` indexes the plan's
+        round-step branches when the plan is per-service/adaptive; with a
+        single branch it is unused and the step is called directly."""
 
-        def body(p, r):
+        def body(carry, r):
+            p, rs = carry
             do = r < n_rounds
             batches = task.batch_fn(svc_id, first_round + r)
-            if attack is None:
-                new_p, metrics = task.round_step(p, batches, weights)
+            args = ((p, batches, weights) + ((rs,) if ef else ())
+                    + (() if attack is None else (byz,)))
+            if plan is not None and plan.multi:
+                out = jax.lax.switch(comp_id, task.steps, *args)
             else:
-                new_p, metrics = task.round_step(p, batches, weights, byz)
+                out = task.steps[0](*args)
+            if ef:
+                new_p, metrics, new_rs = out
+                rs = jax.tree.map(
+                    lambda a, b: jnp.where(do, a, b), new_rs, rs)
+            else:
+                new_p, metrics = out
             p = jax.tree.map(
                 lambda a, b: jnp.where(do, a, b), new_p, p)
-            return p, jnp.where(do, metrics["loss"], 0.0)
+            return (p, rs), jnp.where(do, metrics["loss"], 0.0)
 
-        params, losses = jax.lax.scan(
-            body, params, jnp.arange(train.rounds_cap, dtype=jnp.int32))
+        (params, resid), losses = jax.lax.scan(
+            body, (params, resid),
+            jnp.arange(train.rounds_cap, dtype=jnp.int32))
         mean_loss = jnp.sum(losses) / jnp.maximum(n_rounds, 1)
-        return params, mean_loss
+        return params, resid, mean_loss
 
     def step(carry, period):
         if attack is not None:
             period, byz_p = period
         (rounds_done, duration, chan_state, churn_state, pol_state,
-         params, trained, clipped) = carry
+         params, resid, comp_ids, trained, clipped) = carry
         prev_rounds = rounds_done
+        # The branch ids applied THIS period (allocation and training must
+        # agree on what each service transmits): the carried control for
+        # adaptive plans, the static targets otherwise.
+        if plan is None:
+            applied_ids = jnp.zeros((n_total,), jnp.int32)
+            ul_comp = None
+        else:
+            applied_ids = comp_ids if plan.adaptive else level_ids
+            ul_comp = ratios[applied_ids]
         (rounds_done, duration, chan_state, churn_state, pol_state, stats,
          ex) = simulator._period_step(
             rounds_done, duration, chan_state, churn_state, pol_state,
-            period, arrivals, counts, key,
+            period, arrivals, counts, key, None, ul_comp,
             policy_fn=pol.step, chan_step=chan_proc.step,
             churn_step=churn_proc.step, chan_rebuilds=chan_proc.rebuilds,
             net=net, n_total=n_total, k_max=k_max,
@@ -346,13 +506,26 @@ def _cotrain_episode_impl(arrivals, counts, key, *, train, attack, policy,
             <= train.deadline_x * t_round[:, None])
         weights = admitted.astype(jnp.float32)
         if attack is None:
-            params, train_loss = jax.vmap(train_service)(
-                svc_ids, params, trained, n_train, weights)
+            params, resid, train_loss = jax.vmap(train_service)(
+                svc_ids, params, resid, applied_ids, trained, n_train,
+                weights)
         else:
-            params, train_loss = jax.vmap(train_service)(
-                svc_ids, params, trained, n_train, weights, byz_p)
+            params, resid, train_loss = jax.vmap(train_service)(
+                svc_ids, params, resid, applied_ids, trained, n_train,
+                weights, byz_p)
         trained = trained + n_train
         ev_loss, ev_acc = jax.vmap(task.eval_fn)(params, svc_ids)
+        # Adaptive control for the NEXT period, from this period's split: a
+        # service whose share fell below comp_threshold x the fair share
+        # B/n_active switches to its target level; one that recovered
+        # switches back to dense (reactive, one-period lag by construction
+        # -- the allocator must price what the clients actually transmit).
+        if plan is not None and plan.adaptive:
+            n_active = jnp.sum(active.astype(jnp.float32))
+            fair = net.total_bandwidth_mhz / jnp.maximum(n_active, 1.0)
+            tight = jnp.logical_and(
+                active, b < train.comp_threshold * fair)
+            comp_ids = jnp.where(tight, level_ids, 0).astype(jnp.int32)
         out = {
             "loss": ev_loss, "acc": ev_acc, "train_loss": train_loss,
             "b": b, "f": f, "active": active, "rounds": eff,
@@ -362,21 +535,25 @@ def _cotrain_episode_impl(arrivals, counts, key, *, train, attack, policy,
             "participants": jnp.where(
                 n_train > 0,
                 jnp.sum(weights, axis=-1).astype(jnp.int32), 0),
+            # the applied compression record: branch id + s^UT multiplier
+            "comp_id": applied_ids,
+            "ul_mult": (ul_comp if ul_comp is not None
+                        else jnp.ones((n_total,), jnp.float32)),
             "freq_sum": stats["freq_sum"], "objective": stats["objective"],
             "all_done": stats["all_done"],
         }
         carry = (rounds_done, duration, chan_state, churn_state, pol_state,
-                 params, trained, clipped)
+                 params, resid, comp_ids, trained, clipped)
         return carry, out
 
     init = (jnp.zeros((n_total,), jnp.int32), jnp.zeros((n_total,), jnp.int32),
             chan_proc.init(key, n_total, k_max),
             churn_proc.init(key, n_total, k_max),
-            pol.init_state(n_total), params0,
+            pol.init_state(n_total), params0, resid0, comp0,
             jnp.zeros((n_total,), jnp.int32), jnp.int32(0))
     periods = jnp.arange(max_periods, dtype=jnp.int32)
     xs = periods if attack is None else (periods, byz_plan)
-    (rounds_done, duration, _, _, _, params, trained, clipped), hist = (
+    (rounds_done, duration, _, _, _, params, _, _, trained, clipped), hist = (
         jax.lax.scan(step, init, xs))
     return rounds_done, duration, trained, clipped, params, hist
 
@@ -412,7 +589,8 @@ def _cotrain_fleet_fn(mesh, axis: str, n_chunks: int, chunk: int,
 # ---------------------------------------------------------------------------
 
 _CURVE_KEYS = ("loss", "acc", "train_loss", "b", "f", "active", "rounds",
-               "trained", "participants", "freq_sum", "objective")
+               "trained", "participants", "comp_id", "ul_mult",
+               "freq_sum", "objective")
 
 
 def _statics(cfg: simulator.SimConfig, train: TrainSpec,

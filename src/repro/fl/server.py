@@ -76,6 +76,7 @@ def make_fl_round_step(
     prox_mu: float = 0.0,
     compression: str = "none",
     topk_frac: float = 0.01,
+    error_feedback: bool = False,
     aggregator: str = "fedavg",
     trim_frac: float = 0.1,
     clip_norm: float | None = None,
@@ -92,12 +93,30 @@ def make_fl_round_step(
     ``trim_frac`` / ``clip_norm`` / ``byz_f``).  ``weight_cap`` bounds
     client-reported weights (``sanitize_weights``; applies to the loss
     average and the fedavg denominator alike).  ``attack`` is an optional
-    ``chaos.clients.AttackSpec``: when set, the returned step takes a fourth
-    argument ``byz`` -- a (C,) bool mask of Byzantine clients -- and applies
-    the attack to their deltas/weights *before* aggregation, modelling
-    adversarial participants the server never observes directly.
+    ``chaos.clients.AttackSpec``: when set, the returned step takes an extra
+    trailing argument ``byz`` -- a (C,) bool mask of Byzantine clients --
+    and applies the attack to their deltas/weights *before* aggregation,
+    modelling adversarial participants the server never observes directly.
+
+    ``error_feedback=True`` turns on client-held compression residuals: the
+    step's signature becomes ``round(params, client_batches, client_weights,
+    residuals[, byz]) -> (params, metrics, residuals')`` where ``residuals``
+    is a params-shaped pytree with a leading (C,) client axis.  Each client
+    adds its carried residual to the fresh delta before compressing and
+    keeps the part the compressor cut (Karimireddy-style EF), so the
+    telescoping identity  sum(transmitted) + residual_T = sum(raw deltas)
+    holds over any window of full-participation rounds.  A straggler
+    (weight 0) transmits nothing, so its residual is left untouched rather
+    than advanced -- the withheld mass is neither dropped nor
+    double-counted.  The default ``False`` keeps the historical signature
+    and the bitwise-pinned seed path.
     """
     from repro.fl import aggregation as fl_agg
+
+    if compression not in fl_comp.METHODS:
+        raise ValueError(
+            f"unknown compression method {compression!r}; "
+            f"available: {fl_comp.METHODS}")
 
     if aggregator == "fedavg":
         # The pinned default path: identical call to the seed fedavg_round.
@@ -115,17 +134,19 @@ def make_fl_round_step(
         delta, loss = fl_client.local_update(
             loss_fn, params, batches, lr=client_lr, prox_mu=prox_mu
         )
-        if compression == "topk":
-            delta, _ = fl_comp.topk_sparsify(delta, topk_frac)
-        elif compression == "int8":
-            delta, _ = fl_comp.int8_quantize(delta)
-        elif compression == "topk_int8":
-            delta, _ = fl_comp.topk_sparsify(delta, topk_frac)
-            delta, _ = fl_comp.int8_quantize(delta)
+        if compression != "none":
+            delta, _ = fl_comp.compress(compression, delta, topk_frac)
         return delta, loss
 
-    def round_step(params, client_batches, client_weights, byz=None):
-        deltas, losses = jax.vmap(one_client, in_axes=(None, 0))(params, client_batches)
+    def one_client_ef(params, batches, residual):
+        delta, loss = fl_client.local_update(
+            loss_fn, params, batches, lr=client_lr, prox_mu=prox_mu
+        )
+        delta, residual = fl_comp.compress(
+            compression, delta, topk_frac, residual)
+        return delta, loss, residual
+
+    def _finish(params, deltas, losses, client_weights, byz):
         if attack is not None:
             deltas, client_weights = attack_fn(deltas, client_weights, byz)
         if weight_cap is not None or attack is not None:
@@ -146,7 +167,39 @@ def make_fl_round_step(
                             "participating": jnp.sum(client_weights > 0),
                             "nonfinite_weights": n_bad_w}
 
-    return round_step
+    def round_step(params, client_batches, client_weights, byz=None):
+        deltas, losses = jax.vmap(one_client, in_axes=(None, 0))(params, client_batches)
+        return _finish(params, deltas, losses, client_weights, byz)
+
+    def round_step_ef(params, client_batches, client_weights, residuals,
+                      byz=None):
+        deltas, losses, new_resid = jax.vmap(
+            one_client_ef, in_axes=(None, 0, 0))(
+                params, client_batches, residuals)
+        # Stragglers transmit nothing this round: their residual must not
+        # advance (the mass they withheld stays carried, once).  Gate on the
+        # *reported* weights -- an attack may later rescale a participant's
+        # weight, but participation itself is the deadline's verdict.
+        part = client_weights > 0
+        resid_out = jax.tree.map(
+            lambda new, old: jnp.where(
+                part.reshape((-1,) + (1,) * (new.ndim - 1)), new,
+                old.astype(new.dtype)),
+            new_resid, residuals)
+        new_params, metrics = _finish(
+            params, deltas, losses, client_weights, byz)
+        return new_params, metrics, resid_out
+
+    return round_step_ef if error_feedback else round_step
+
+
+def init_residuals(params, n_clients: int):
+    """Zero error-feedback residual state for ``n_clients`` clients: a
+    params-shaped pytree with a leading (C,) axis, as consumed/returned by
+    ``make_fl_round_step(error_feedback=True)``'s round step."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_clients,) + jnp.shape(p), jnp.asarray(p).dtype),
+        params)
 
 
 def straggler_weights(round_latencies: jax.Array, deadline: float) -> jax.Array:

@@ -93,7 +93,21 @@ def arch_service_tuple(
     r_dl/r_ul: per-client base rates (bit/s/Hz); client_flops: per-client
     compute speeds phi_k (FLOP/s).  Payloads are in Mbit to match the
     allocator's canonical units.
+
+    ``uplink_compression`` is the *static* s^UT multiplier baked into the
+    tuple (``compression_ratio`` of the service's transmit level); ratios
+    above 1.0 are rejected -- ``compression_ratio`` clamps them, so a bigger
+    value here means the caller bypassed the pricing.  ServiceSets built
+    from this tuple (``types.stack_services``) also carry the dynamic-s^UT
+    column, so per-*period* recompression (``types.scale_uplink``, driven by
+    the co-simulation's compression controller) composes on top of this
+    static baseline.
     """
+    if not 0.0 < uplink_compression <= 1.0:
+        raise ValueError(
+            f"uplink_compression must be in (0, 1] (compressing can never "
+            f"grow s^UT past dense -- use fl.compression.compression_ratio, "
+            f"which clamps), got {uplink_compression}")
     bits = model_bits(cfg, weight_bits)
     s_dl = bits / MBIT
     s_ul = bits * uplink_compression / MBIT

@@ -84,7 +84,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat, scenarios
 from repro.core import network, policy as policy_mod
-from repro.core.types import ServiceSet, mask_clients, mask_inactive
+from repro.core.types import (ServiceSet, mask_clients, mask_inactive,
+                              scale_uplink)
 from repro.launch import mesh as mesh_lib
 
 POLICIES = ("coop", "selfish", "ec", "es", "pp")
@@ -239,7 +240,8 @@ def _static_draws(cfg: SimConfig, net: network.NetworkConfig) -> tuple[np.ndarra
 # ---------------------------------------------------------------------------
 
 def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
-                 period, arrivals, counts, key, extra_avail=None, *,
+                 period, arrivals, counts, key, extra_avail=None,
+                 ul_comp=None, *,
                  policy_fn, chan_step, churn_step, chan_rebuilds: bool, net,
                  n_total: int, k_max: int, rounds_required: int):
     """One period: evolve channels and churn, flip activity masks, allocate.
@@ -264,6 +266,16 @@ def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
     bitwise no-op (masking an already-masked set is the identity), which is
     exactly what makes the live daemon's healthy-path stream replayable by
     ``run_scan``.
+
+    ``ul_comp`` is an optional (n_total,) per-service uplink-compression
+    multiplier (each service's ``fl.compression.compression_ratio``) applied
+    to the dynamic s^UT column via ``types.scale_uplink`` *before* the
+    policy runs -- so the allocator prices the compressed upload, round
+    frequency rises, and the bandwidth split shifts.  This is the
+    compression→allocation feedback edge of the co-simulation
+    (``fl.cotrain``).  Like ``extra_avail``, the ``None`` default leaves the
+    traced graph untouched, which is what keeps every duration engine and
+    the committed goldens bitwise-pinned.
     """
     _TRACE_COUNTS["allocation_step"] += 1
     key_p = jax.random.fold_in(key, period)
@@ -283,6 +295,8 @@ def _period_step(rounds_done, duration, chan_state, churn_state, pol_state,
     churn_state, svc_full = churn_step(key_p, churn_state, svc_full)
     if extra_avail is not None:
         svc_full = mask_clients(svc_full, extra_avail)
+    if ul_comp is not None:
+        svc_full = scale_uplink(svc_full, ul_comp)
     active = jnp.logical_and(arrivals <= period, rounds_done < rounds_required)
     svc = mask_inactive(svc_full, active)
     b, f, pol_state = policy_fn(svc, net.total_bandwidth_mhz, pol_state)

@@ -44,7 +44,7 @@ def allocate(policy, svc, b_total, n_bids=5, alpha_fair=0.5,
     return b
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--services", default="gemma-2b,xlstm-1.3b")
     # "ec" is excluded: the driver applies the optimal per-client split to
@@ -61,30 +61,73 @@ def main() -> None:
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # --reduced / --no-reduced: the old `action="store_true", default=True`
+    # declaration could never be switched off, leaving the full-config branch
+    # dead (the same bug PR 7's serve.py fix pinned; tests/test_train_launch.py
+    # pins both directions here).
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="train the smoke-reduced configs (default); "
+                         "--no-reduced trains the full public configs")
     ap.add_argument("--compression", default="none",
-                    choices=["none", "int8", "topk", "topk_int8"])
+                    choices=list(fl_comp.METHODS))
+    ap.add_argument("--topk-frac", type=float, default=0.01,
+                    help="kept fraction for topk/topk_int8 -- one value "
+                         "feeds BOTH the s^UT pricing (compression_ratio) "
+                         "and the round step's sparsifier")
+    ap.add_argument("--error-feedback", action="store_true", default=False,
+                    help="carry client-held compression residuals across "
+                         "rounds (Karimireddy-style EF)")
     ap.add_argument("--straggler-deadline-x", type=float, default=3.0,
                     help="deadline = x * optimal round time")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-rounds-per-period", type=int, default=6)
-    args = ap.parse_args()
+    return ap
+
+
+def resolve_config(arch: str, reduced: bool):
+    """The config branch ``--reduced`` selects (both directions reachable)."""
+    return configs.get_smoke_config(arch) if reduced else configs.get_config(arch)
+
+
+def compression_setup(args) -> dict:
+    """Single source of truth for the driver's compression knobs.
+
+    Returns ``ratio`` -- the s^UT multiplier priced into every service tuple
+    -- and ``round_step_kwargs``, the matching ``make_fl_round_step``
+    settings.  Both sides read the SAME ``--topk-frac``, so the allocator can
+    never price a different sparsity than the round step transmits (the old
+    code let each fall back to its own hard-coded default).
+    """
+    ratio = fl_comp.compression_ratio(args.compression,
+                                      k_frac=args.topk_frac)
+    return dict(
+        ratio=ratio,
+        round_step_kwargs=dict(
+            compression=args.compression,
+            topk_frac=args.topk_frac,
+            error_feedback=args.error_feedback,
+        ),
+    )
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     arch_names = args.services.split(",")
     rng = np.random.default_rng(args.seed)
     net = network.NetworkConfig()
+    comp = compression_setup(args)
 
     # ---- build one FL service per arch: model + data + round step + tuple
     services = []
     for i, name in enumerate(arch_names):
-        cfg = configs.get_smoke_config(name) if args.reduced else configs.get_config(name)
+        cfg = resolve_config(name, args.reduced)
         model = registry.build_model(cfg)
         params = model.init(jax.random.key(args.seed + i))
         data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                            seed=args.seed + i, temperature=0.3)
-        comp_ratio = fl_comp.compression_ratio(args.compression) \
-            if args.compression != "none" else 1.0
         k = args.clients
         pl_db = 85.0 + rng.normal(0, 2.0, size=k)
         raw = arch_service_tuple(
@@ -93,7 +136,7 @@ def main() -> None:
             r_ul=network.base_rate(jnp.float32(0.1), jnp.asarray(pl_db)),
             client_flops=jnp.asarray(rng.uniform(2e11, 8e11, size=k)),
             tokens_per_round=args.batch * args.seq,
-            uplink_compression=comp_ratio,
+            uplink_compression=comp["ratio"],
         )
         if cfg.family == "encdec":
             def loss_fn(p, b, model=model, cfg=cfg):
@@ -105,10 +148,12 @@ def main() -> None:
             loss_fn = model.loss
         round_step = jax.jit(fl_server.make_fl_round_step(
             loss_fn, local_steps=args.local_steps, client_lr=1.0,
-            compression=args.compression))
+            **comp["round_step_kwargs"]))
+        residuals = (fl_server.init_residuals(params, args.clients)
+                     if args.error_feedback else None)
         services.append(dict(name=name, cfg=cfg, model=model, params=params,
                              data=data, raw=raw, round_step=round_step,
-                             rounds_done=0, losses=[]))
+                             residuals=residuals, rounds_done=0, losses=[]))
 
     svc_set = stack_services([s["raw"] for s in services])
     mgr = None
@@ -157,7 +202,12 @@ def main() -> None:
                 ]
                 batches = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
                 t0 = time.time()
-                s["params"], metrics = s["round_step"](s["params"], batches, weights)
+                if args.error_feedback:
+                    s["params"], metrics, s["residuals"] = s["round_step"](
+                        s["params"], batches, weights, s["residuals"])
+                else:
+                    s["params"], metrics = s["round_step"](
+                        s["params"], batches, weights)
                 s["rounds_done"] += 1
                 s["losses"].append(float(metrics["loss"]))
             if int(n_rounds[si]):

@@ -1,0 +1,275 @@
+"""Compression unit + regression tests: ratio pricing (clamp/warn above
+dense, topk_int8 composition math, unknown-method rejection), the
+``compress`` dispatch (none-flush semantics, exact-k on tied / all-zero
+leaves), and the error-feedback round step built by
+``server.make_fl_round_step(error_feedback=True)`` -- the telescoping
+identity over a multi-round window on the *actual* params trajectory, the
+EF-off bitwise pin, and the straggler residual freeze."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import compression, server
+from repro.fl.service import arch_service_tuple
+from repro import configs
+
+
+# ---------------------------------------------------------------- ratios
+
+def test_ratio_none_is_dense():
+    assert compression.compression_ratio("none") == 1.0
+    assert compression.compression_ratio("none", k_frac=0.9) == 1.0
+
+
+def test_ratio_int8_is_bit_fraction():
+    assert compression.compression_ratio("int8") == pytest.approx(0.25)
+    assert compression.compression_ratio(
+        "int8", weight_bits=16) == pytest.approx(0.5)
+
+
+def test_ratio_topk_counts_values_and_indices():
+    # k_frac * (weight_bits + index_bits) / weight_bits
+    assert compression.compression_ratio(
+        "topk", k_frac=0.05, index_bits=16) == pytest.approx(0.075)
+    assert compression.compression_ratio(
+        "topk", k_frac=0.01) == pytest.approx(0.02)
+
+
+def test_ratio_topk_int8_composition_math():
+    # quantized values (8 bits) + indices, over dense weight_bits
+    assert compression.compression_ratio(
+        "topk_int8", k_frac=0.05, index_bits=16) == pytest.approx(
+            0.05 * (8 + 16) / 32)
+    assert compression.compression_ratio(
+        "topk_int8", k_frac=0.1, weight_bits=16,
+        index_bits=32) == pytest.approx(0.1 * (8 + 32) / 16)
+
+
+def test_ratio_clamps_and_warns_above_dense():
+    """Large k_frac prices topk above a dense upload; the allocator must
+    never see that, so the ratio clamps to 1.0 with a warning."""
+    for method, kwargs in (("topk", dict(k_frac=0.9)),            # 1.8
+                           ("topk_int8", dict(k_frac=0.9))):      # 1.125
+        with pytest.warns(UserWarning, match="exceeds dense"):
+            assert compression.compression_ratio(method, **kwargs) == 1.0
+    # in-range ratios never warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        compression.compression_ratio("topk", k_frac=0.01)
+        compression.compression_ratio("int8")
+
+
+def test_ratio_rejects_unknown_method_and_bad_k_frac():
+    with pytest.raises(ValueError, match="unknown compression method"):
+        compression.compression_ratio("gzip")
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError, match="k_frac"):
+            compression.compression_ratio("topk", k_frac=bad)
+        with pytest.raises(ValueError, match="k_frac"):
+            compression.compression_ratio("topk_int8", k_frac=bad)
+    # k_frac is irrelevant to int8 -- out-of-range values must not trip it
+    assert compression.compression_ratio("int8", k_frac=5.0) == 0.25
+
+
+def test_service_tuple_rejects_inflated_multiplier():
+    """arch_service_tuple refuses s^UT multipliers outside (0, 1]: a value
+    above 1 means the caller bypassed compression_ratio's clamp."""
+    cfg = configs.get_smoke_config("gemma-2b", n_layers=1, d_model=32,
+                                   d_ff=64, vocab_size=32, n_heads=2,
+                                   head_dim=16)
+    kwargs = dict(r_dl=jnp.ones((2,)), r_ul=jnp.ones((2,)),
+                  client_flops=jnp.full((2,), 1e12))
+    for bad in (0.0, -0.5, 1.8):
+        with pytest.raises(ValueError, match="uplink_compression"):
+            arch_service_tuple(cfg, uplink_compression=bad, **kwargs)
+    arch_service_tuple(cfg, uplink_compression=1.0, **kwargs)  # dense OK
+
+
+# ------------------------------------------------------------- compress()
+
+def test_compress_rejects_unknown_method():
+    with pytest.raises(ValueError, match="unknown compression method"):
+        compression.compress("gzip", {"w": jnp.ones((4,))})
+
+
+def test_compress_none_identity_without_residual():
+    delta = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    out, res = compression.compress("none", delta)
+    assert res is None
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(delta["w"]))
+
+
+def test_compress_none_flushes_residual():
+    """Under error feedback the dense upload carries the backlog a lossy
+    period withheld: ``none`` transmits delta + residual and zeroes the
+    residual (what an adaptive controller switching back to dense needs)."""
+    delta = {"w": jnp.asarray([1.0, 2.0])}
+    res = {"w": jnp.asarray([0.5, -0.25])}
+    out, new_res = compression.compress("none", delta, residual=res)
+    np.testing.assert_array_equal(np.asarray(out["w"]), [1.5, 1.75])
+    np.testing.assert_array_equal(np.asarray(new_res["w"]), [0.0, 0.0])
+
+
+def test_compress_dispatch_matches_primitives():
+    delta = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(32,)).astype(np.float32))}
+    for method, direct in (
+            ("topk", lambda d: compression.topk_sparsify(d, 0.25)),
+            ("int8", lambda d: compression.int8_quantize(d))):
+        got, got_res = compression.compress(method, delta, k_frac=0.25)
+        want, want_res = direct(delta)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(want["w"]))
+        np.testing.assert_array_equal(np.asarray(got_res["w"]),
+                                      np.asarray(want_res["w"]))
+
+
+def test_topk_int8_composes_under_one_residual():
+    """topk_int8's residual absorbs the TOTAL round-trip error of the
+    composition: transmitted + residual == delta (+ carried residual),
+    exactly -- not just the sparsification stage's error."""
+    rng = np.random.default_rng(1)
+    delta = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+    carried = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+    out, res = compression.compress("topk_int8", delta, k_frac=0.25,
+                                    residual=carried)
+    # exactly k entries survive the sparsify stage (quantization keeps them)
+    assert int(np.sum(np.asarray(out["w"]) != 0.0)) <= 16
+    np.testing.assert_allclose(
+        np.asarray(out["w"], np.float64) + np.asarray(res["w"], np.float64),
+        np.asarray(delta["w"], np.float64) + np.asarray(carried["w"],
+                                                        np.float64),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_topk_exact_k_on_tied_leaf():
+    """All-equal magnitudes: a threshold compare would keep every entry;
+    top_k's index selection keeps exactly k (deterministic tie-break)."""
+    delta = {"w": jnp.ones((16,))}
+    sparse, res = compression.topk_sparsify(delta, 0.25)
+    assert int(np.sum(np.asarray(sparse["w"]) != 0.0)) == 4
+    np.testing.assert_allclose(
+        np.asarray(sparse["w"]) + np.asarray(res["w"]),
+        np.asarray(delta["w"]))
+
+
+def test_topk_exact_k_on_all_zero_leaf():
+    """Zero leaf (converged layer): threshold 0 would transmit the whole
+    leaf as "kept zeros"; index selection transmits k entries and the
+    residual stays exactly zero."""
+    delta = {"w": jnp.zeros((16,)), "b": jnp.asarray([3.0, 0.0, -1.0, 0.5])}
+    sparse, res = compression.topk_sparsify(delta, 0.25)
+    np.testing.assert_array_equal(np.asarray(sparse["w"]), np.zeros((16,)))
+    np.testing.assert_array_equal(np.asarray(res["w"]), np.zeros((16,)))
+    # non-zero leaf is unaffected by its sibling: exactly 1 of 4 kept
+    assert int(np.sum(np.asarray(sparse["b"]) != 0.0)) == 1
+    assert float(sparse["b"][0]) == 3.0
+
+
+def test_topk_k_floor_is_one():
+    """k_frac below 1/n still transmits one entry per leaf, never zero."""
+    sparse, _ = compression.topk_sparsify(
+        {"w": jnp.asarray([0.1, -5.0, 0.2])}, 0.01)
+    kept = np.asarray(sparse["w"])
+    assert int(np.sum(kept != 0.0)) == 1 and float(kept[1]) == -5.0
+
+
+# -------------------------------------------- error-feedback round step
+
+def _ef_setup(n_clients=3, dim=8, seed=0):
+    """Quadratic toy problem: loss = mean((w - x)^2), one leaf, so the raw
+    per-round delta is analytically recoverable from a dense round step."""
+    rng = np.random.default_rng(seed)
+
+    def loss_fn(p, batch):
+        return jnp.mean((p["w"] - batch["x"]) ** 2)
+
+    params = {"w": jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))}
+    batches = {"x": jnp.asarray(rng.normal(
+        size=(n_clients, 2, dim)).astype(np.float32))}
+    kwargs = dict(local_steps=2, client_lr=0.3, server_lr=1.0)
+    return loss_fn, params, batches, kwargs
+
+
+def test_ef_round_step_telescopes_over_rounds():
+    """Over any window of full-participation rounds with server_lr=1:
+    (params_T - params_0) + mean_c(residual_T) == sum_t mean_c(raw delta_t)
+    where the raw deltas are evaluated on the ACTUAL params trajectory --
+    error feedback delays mass but never invents or drops it."""
+    loss_fn, params0, batches, kwargs = _ef_setup()
+    n_clients = batches["x"].shape[0]
+    step_ef = server.make_fl_round_step(
+        loss_fn, compression="topk", topk_frac=0.25,
+        error_feedback=True, **kwargs)
+    step_dense = server.make_fl_round_step(loss_fn, **kwargs)
+
+    params = params0
+    residuals = server.init_residuals(params0, n_clients)
+    weights = jnp.ones((n_clients,))
+    raw_sum = np.zeros_like(np.asarray(params0["w"], np.float64))
+    for _ in range(6):
+        # dense step at the EF trajectory's params recovers mean_c(raw delta)
+        dense_next, _ = step_dense(params, batches, weights)
+        raw_sum += (np.asarray(dense_next["w"], np.float64)
+                    - np.asarray(params["w"], np.float64))
+        params, _, residuals = step_ef(params, batches, weights, residuals)
+
+    walked = (np.asarray(params["w"], np.float64)
+              - np.asarray(params0["w"], np.float64))
+    mean_resid = np.mean(np.asarray(residuals["w"], np.float64), axis=0)
+    np.testing.assert_allclose(walked + mean_resid, raw_sum,
+                               rtol=1e-4, atol=1e-5)
+    # and the residual is genuinely nonzero (the compressor withheld mass)
+    assert float(np.max(np.abs(np.asarray(residuals["w"])))) > 0.0
+
+
+def test_ef_none_matches_plain_step_bitwise():
+    """EF with the identity compressor and zero residuals is the plain
+    FedAvg step bitwise; the residuals stay exactly zero."""
+    loss_fn, params0, batches, kwargs = _ef_setup(seed=3)
+    n_clients = batches["x"].shape[0]
+    step_ef = server.make_fl_round_step(
+        loss_fn, compression="none", error_feedback=True, **kwargs)
+    step_plain = server.make_fl_round_step(loss_fn, **kwargs)
+    weights = jnp.ones((n_clients,))
+    residuals = server.init_residuals(params0, n_clients)
+    p_ef, m_ef, res = step_ef(params0, batches, weights, residuals)
+    p_plain, m_plain = step_plain(params0, batches, weights)
+    np.testing.assert_array_equal(np.asarray(p_ef["w"]),
+                                  np.asarray(p_plain["w"]))
+    np.testing.assert_array_equal(np.asarray(m_ef["loss"]),
+                                  np.asarray(m_plain["loss"]))
+    np.testing.assert_array_equal(np.asarray(res["w"]),
+                                  np.zeros_like(np.asarray(res["w"])))
+
+
+def test_ef_straggler_residual_frozen():
+    """A dropped client (weight 0) transmits nothing, so its residual must
+    not advance -- neither flushed nor recompressed."""
+    loss_fn, params0, batches, kwargs = _ef_setup(seed=5)
+    n_clients = batches["x"].shape[0]
+    step_ef = server.make_fl_round_step(
+        loss_fn, compression="topk", topk_frac=0.25,
+        error_feedback=True, **kwargs)
+    weights = jnp.asarray([1.0, 0.0, 1.0])
+    residuals = jax.tree.map(
+        lambda p: jnp.arange(n_clients * p.size, dtype=p.dtype).reshape(
+            (n_clients,) + p.shape) * 0.01,
+        params0)
+    _, _, res = step_ef(params0, batches, weights, residuals)
+    # straggler's row untouched bitwise; participants' rows advanced
+    np.testing.assert_array_equal(np.asarray(res["w"][1]),
+                                  np.asarray(residuals["w"][1]))
+    assert not np.array_equal(np.asarray(res["w"][0]),
+                              np.asarray(residuals["w"][0]))
+
+
+def test_init_residuals_shape_and_zero():
+    params = {"a": jnp.ones((3, 2)), "b": jnp.ones((5,))}
+    res = server.init_residuals(params, 4)
+    assert res["a"].shape == (4, 3, 2) and res["b"].shape == (4, 5)
+    assert all(float(jnp.max(jnp.abs(v))) == 0.0 for v in res.values())

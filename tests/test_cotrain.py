@@ -344,3 +344,122 @@ def test_train_spec_validation():
     with pytest.raises(ValueError, match="encoder-decoder"):
         cotrain._build_task(
             cotrain.TrainSpec(task="zoo", arch="seamless-m4t-large-v2"), 4)
+    with pytest.raises(ValueError, match="comp_levels"):
+        cotrain.TrainSpec(comp_levels=())
+    with pytest.raises(ValueError, match="comp_levels"):
+        cotrain.TrainSpec(comp_levels=["topk"])      # list, not tuple
+    with pytest.raises(ValueError, match="compression"):
+        cotrain.TrainSpec(comp_levels=("topk", "gzip"))
+    with pytest.raises(ValueError, match="comp_policy"):
+        cotrain.TrainSpec(comp_policy="sometimes")
+    with pytest.raises(ValueError, match="topk_frac"):
+        cotrain.TrainSpec(topk_frac=0.0)
+    with pytest.raises(ValueError, match="comp_threshold"):
+        cotrain.TrainSpec(comp_threshold=0.0)
+
+
+# ---------------------------------------------------------------------------
+# (g) The closed compression->allocation loop.
+# ---------------------------------------------------------------------------
+
+def test_topk_compression_shortens_durations():
+    """Pricing topk into the dynamic s^UT column makes every round cheaper:
+    the compressed episode's durations never exceed the dense stream's, the
+    priced multiplier shows up verbatim in the ``ul_mult`` history, and the
+    whole episode still traces exactly once."""
+    cfg = _cfg(policy="es")
+    train = dataclasses.replace(TRAIN, compression="topk", topk_frac=0.05,
+                                index_bits=16)
+    simulator.reset_trace_count()
+    co = cotrain.run_cotrain_scan(cfg, train, NET)
+    assert simulator.trace_count() == 1
+    ref = simulator.run_scan(cfg, NET)
+    assert all(c <= r for c, r in zip(co["durations"], ref["durations"]))
+    assert sum(co["durations"]) < sum(ref["durations"])
+    # ul_mult records the priced ratio: 0.05 * (32 + 16) / 32 = 0.075
+    np.testing.assert_allclose(np.asarray(co["history"]["ul_mult"]), 0.075)
+    assert np.all(np.asarray(co["history"]["comp_id"]) == 1)
+
+
+def test_all_none_levels_bitwise_equal_dense_spec():
+    """An explicit all-dense level assignment compiles to the identical
+    no-compression episode: the gating is static, so the traced graph (and
+    every output) is bitwise the baseline spec's."""
+    cfg = _cfg(policy="coop")
+    dense = cotrain.run_cotrain_scan(cfg, TRAIN, NET)
+    leveled = cotrain.run_cotrain_scan(
+        cfg, dataclasses.replace(TRAIN, comp_levels=("none",) * 3), NET)
+    assert leveled["durations"] == dense["durations"]
+    for key in ("loss", "acc", "train_loss", "b"):
+        np.testing.assert_array_equal(leveled["history"][key],
+                                      dense["history"][key])
+    np.testing.assert_array_equal(np.asarray(leveled["params"]),
+                                  np.asarray(dense["params"]))
+    np.testing.assert_array_equal(np.asarray(leveled["history"]["ul_mult"]),
+                                  1.0)
+
+
+def test_mixed_levels_price_per_service():
+    """Heterogeneous static levels: each service slot carries its own s^UT
+    multiplier into the allocator, constant over the episode."""
+    cfg = _cfg(policy="es")
+    train = dataclasses.replace(
+        TRAIN, comp_levels=("none", "topk", "int8"), topk_frac=0.05,
+        index_bits=16)
+    co = cotrain.run_cotrain_scan(cfg, train, NET)
+    ul = np.asarray(co["history"]["ul_mult"])
+    np.testing.assert_allclose(ul[:, 0], 1.0)
+    np.testing.assert_allclose(ul[:, 1], 0.075)
+    np.testing.assert_allclose(ul[:, 2], 0.25)
+    assert np.all(np.isfinite(np.asarray(co["history"]["loss"])))
+
+
+def test_adaptive_compression_reacts_to_tight_bandwidth():
+    """The adaptive controller starts dense (reactive: the first period has
+    no allocation to judge), then compresses exactly the services whose
+    share fell below comp_threshold x fair, re-pricing their s^UT the next
+    period."""
+    cfg = _cfg(policy="pp")
+    train = dataclasses.replace(TRAIN, compression="topk", topk_frac=0.05,
+                                index_bits=16, comp_policy="adaptive",
+                                comp_threshold=1.5)
+    co = cotrain.run_cotrain_scan(cfg, train, NET)
+    h = co["history"]
+    comp_id = np.asarray(h["comp_id"])
+    ul = np.asarray(h["ul_mult"])
+    assert np.all(comp_id[0] == 0), "first period must apply dense"
+    assert comp_id.max() == 1, "threshold 1.5x fair must trigger under pp"
+    # the applied multiplier is a pure function of the applied level
+    np.testing.assert_allclose(ul[comp_id == 1], 0.075)
+    np.testing.assert_allclose(ul[comp_id == 0], 1.0)
+    # the controller's decision matches the previous period's shares
+    active = np.asarray(h["active"]).astype(bool)
+    b = np.asarray(h["b"])
+    for t in range(1, co["periods"]):
+        n_act = max(int(active[t - 1].sum()), 1)
+        fair = NET.total_bandwidth_mhz / n_act
+        want = active[t - 1] & (b[t - 1] < train.comp_threshold * fair)
+        np.testing.assert_array_equal(comp_id[t] == 1, want)
+
+
+def test_error_feedback_episode_trains_and_keeps_allocation():
+    """EF residuals ride the episode carry: the allocation stream is
+    untouched (bitwise vs the same spec without EF -- EF changes params,
+    never s^UT), metrics stay finite, and training makes progress."""
+    cfg = _cfg(policy="es")
+    train = dataclasses.replace(TRAIN, compression="topk", topk_frac=0.25,
+                                error_feedback=True)
+    co = cotrain.run_cotrain_scan(cfg, train, NET)
+    plain = cotrain.run_cotrain_scan(
+        cfg, dataclasses.replace(train, error_feedback=False), NET)
+    assert co["durations"] == plain["durations"]
+    for key in ("b", "f", "ul_mult", "rounds"):
+        np.testing.assert_array_equal(co["history"][key],
+                                      plain["history"][key])
+    h = co["history"]
+    assert np.all(np.isfinite(h["loss"])) and np.all(np.isfinite(h["train_loss"]))
+    assert np.all((h["acc"] >= 0.0) & (h["acc"] <= 1.0))
+    assert sum(co["trained_rounds"]) > 0
+    # EF genuinely changes the learning trajectory under lossy compression
+    assert not np.array_equal(np.asarray(co["params"]),
+                              np.asarray(plain["params"]))

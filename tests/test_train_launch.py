@@ -1,0 +1,91 @@
+"""Training-driver regressions (launch.train).
+
+Pins the two bugs the driver shipped with:
+  * ``--reduced`` was declared ``action="store_true", default=True`` -- a
+    flag that could never be turned off, leaving the full-config branch
+    dead code (the same bug PR 7 pinned in launch.serve);
+  * the allocator's s^UT pricing and the round step's sparsifier each fell
+    back to their own hard-coded ``k_frac`` default, so the bandwidth model
+    could price a different sparsity than the clients actually transmitted.
+    ``compression_setup`` now feeds ONE ``--topk-frac`` to both sides.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import compression as fl_comp
+from repro.launch import train
+
+
+# -- the --reduced flag ------------------------------------------------------
+
+def test_reduced_flag_defaults_on():
+    assert train.build_parser().parse_args([]).reduced is True
+
+
+def test_reduced_flag_can_be_disabled():
+    """The pre-fix parser accepted only ``--reduced`` (a no-op given the
+    True default); ``--no-reduced`` must parse and flip the branch."""
+    assert train.build_parser().parse_args(["--no-reduced"]).reduced is False
+    assert train.build_parser().parse_args(["--reduced"]).reduced is True
+
+
+def test_resolve_config_reaches_both_branches(monkeypatch):
+    from repro import configs
+    monkeypatch.setattr(configs, "get_smoke_config", lambda arch: "smoke")
+    monkeypatch.setattr(configs, "get_config", lambda arch: "full")
+    assert train.resolve_config("any", reduced=True) == "smoke"
+    assert train.resolve_config("any", reduced=False) == "full"
+
+
+# -- k_frac agreement between pricing and round step -------------------------
+
+def test_topk_frac_flag_parses():
+    args = train.build_parser().parse_args(
+        ["--compression", "topk", "--topk-frac", "0.25"])
+    assert args.compression == "topk" and args.topk_frac == 0.25
+    assert train.build_parser().parse_args([]).topk_frac == 0.01
+
+
+def test_compression_setup_prices_and_transmits_same_k_frac():
+    """One ``--topk-frac`` value must reach BOTH the s^UT multiplier and the
+    round step's sparsifier -- desync here means the allocator budgets
+    bandwidth for an upload the clients never send."""
+    args = train.build_parser().parse_args(
+        ["--compression", "topk", "--topk-frac", "0.25", "--error-feedback"])
+    comp = train.compression_setup(args)
+    assert comp["ratio"] == pytest.approx(
+        fl_comp.compression_ratio("topk", k_frac=0.25))
+    rs = comp["round_step_kwargs"]
+    assert rs["compression"] == "topk"
+    assert rs["topk_frac"] == 0.25
+    assert rs["error_feedback"] is True
+    # dense config prices dense and transmits dense
+    dense = train.compression_setup(train.build_parser().parse_args([]))
+    assert dense["ratio"] == 1.0
+    assert dense["round_step_kwargs"]["compression"] == "none"
+    assert dense["round_step_kwargs"]["error_feedback"] is False
+
+
+def test_round_step_kwargs_reach_the_sparsifier():
+    """Behavioral end of the agreement test: a round step built from
+    ``compression_setup``'s kwargs keeps exactly k_frac of the delta."""
+    from repro.fl import server
+
+    args = train.build_parser().parse_args(
+        ["--compression", "topk", "--topk-frac", "0.5"])
+    kwargs = train.compression_setup(args)["round_step_kwargs"]
+
+    def loss_fn(p, batch):
+        return jnp.sum(p["w"] * batch["g"])   # grad == batch["g"]
+
+    step = server.make_fl_round_step(loss_fn, local_steps=1, client_lr=1.0,
+                                     server_lr=1.0, **kwargs)
+    params = {"w": jnp.zeros((4,))}
+    # one client, distinct gradient magnitudes: top half is entries 3, 2
+    batches = {"g": jnp.asarray([[[0.1, 0.2, 0.3, 0.4]]])}
+    new_params, _ = step(params, batches, jnp.ones((1,)))
+    got = np.asarray(new_params["w"])
+    np.testing.assert_allclose(got, [0.0, 0.0, -0.3, -0.4], rtol=1e-6)
+    assert int(np.sum(got != 0.0)) == 2    # exactly k = 0.5 * 4

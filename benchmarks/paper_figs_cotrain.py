@@ -294,9 +294,14 @@ def validate(data: dict) -> None:
             assert all(0.0 <= a <= 1.0 for a in cell["acc_mean"]), (pol, name)
             assert 0.0 < cell["ul_mult_mean"] <= 1.0, (pol, name)
             assert cell["clipped_rounds"] >= 0, (pol, name)
-        # dense prices dense; every lossy level prices below dense
+        # dense prices dense; every *static* lossy level prices below dense.
+        # The adaptive controller may legitimately stay at 1.0: under a
+        # fair allocator (es) no share ever drops below threshold x fair,
+        # so never compressing IS the correct control decision.
         assert cells["none"]["ul_mult_mean"] == 1.0, pol
         for name in set(cells) - {"none"}:
+            if frontier["levels"][name].get("comp_policy") == "adaptive":
+                continue
             assert cells[name]["ul_mult_mean"] < 1.0, (pol, name)
 
     if not data["tiny"]:
